@@ -1,0 +1,164 @@
+"""Shared pretrain/fine-tune/eval harness for the paper-table benchmarks.
+
+Workflow per the paper: a *pretrained* base model is quantized, adapters
+are attached, fine-tuning happens on an instruction dataset, and the
+deployed model is the MERGED one.  At CPU scale:
+
+  * base = llama-proxy (reduced) pretrained on two Markov-chain
+    "datasets" (strides 1 & 3) — cached on disk after the first run;
+  * fine-tune datasets = unseen strides (selfinst/longform/chip2);
+  * metric = answer-token accuracy of the DEPLOYED model
+    (QA-LoRA: exact-merged INT-N; QLoRA: fp merge, optionally + PTQ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models import LM
+from repro.models.common import QuantPolicy, rmsnorm
+from repro.core import convert_tree, quantize
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, split_params,
+                         merge_params, count_params)
+from repro.data import make_stream
+from repro.checkpoint import save_pytree, load_pytree
+
+VOCAB = 64
+SEQ = 64
+PRETRAIN_STEPS = 800
+PRETRAIN_DIR = "experiments/pretrained/llama_proxy_toy"
+
+
+def base_cfg():
+    return C.reduced("llama7b-proxy", n_layers=2, vocab=VOCAB).scaled(
+        quant=QuantPolicy(mode="fp", dtype=jnp.float32))
+
+
+def _train_steps(lm, params, frozen, stream, steps, lr, full=False):
+    ocfg = AdamWConfig(lr=lr, max_grad_norm=1.0)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(tr, opt, batch):
+        def loss_fn(t):
+            p = t if full else merge_params(t, frozen)
+            loss, _ = lm.loss(p, batch)
+            return loss
+        loss, g = jax.value_and_grad(loss_fn)(tr)
+        tr, opt, _ = adamw_update(ocfg, g, opt, tr)
+        return tr, opt, loss
+
+    loss = None
+    for _ in range(steps):
+        toks, labs = stream.next_batch()
+        params, opt, loss = step(params, opt, {"tokens": jnp.asarray(toks),
+                                               "labels": jnp.asarray(labs)})
+    return params, float(loss)
+
+
+def get_pretrained(force=False):
+    """Pretrained fp base (cached)."""
+    cfg = base_cfg()
+    lm = LM(cfg)
+    like = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    if os.path.exists(PRETRAIN_DIR) and not force:
+        return cfg, load_pytree(PRETRAIN_DIR, like)
+    params = lm.init(jax.random.PRNGKey(0))
+    streams = [make_stream(t, vocab=VOCAB, seq_len=SEQ, global_batch=8, seed=i)
+               for i, t in enumerate(("alpaca", "flanv2"))]
+    ocfg = AdamWConfig(lr=5e-3, max_grad_norm=1.0)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, opt, batch):
+        loss, g = jax.value_and_grad(lambda q: lm.loss(q, batch)[0])(p)
+        p, opt, _ = adamw_update(ocfg, g, opt, p)
+        return p, opt, loss
+
+    for i in range(PRETRAIN_STEPS):
+        s = streams[i % 2]
+        toks, labs = s.next_batch()
+        params, opt, _ = step(params, opt, {"tokens": jnp.asarray(toks),
+                                            "labels": jnp.asarray(labs)})
+    save_pytree(jax.tree.map(np.asarray, params), PRETRAIN_DIR)
+    return cfg, params
+
+
+def finetune(mode, bits, group, dataset, steps=300, lr=1e-2, rank=8, seed=0):
+    """Quantize-the-pretrained-base + adapt. Returns (cfg, params, stats)."""
+    cfg_fp, base = get_pretrained()
+    pol = dataclasses.replace(cfg_fp.quant, mode=mode, bits=bits,
+                              group_size=group, rank=rank)
+    cfg = cfg_fp.scaled(quant=pol)
+    params = convert_tree(base, pol, jax.random.PRNGKey(seed))
+    lm = LM(cfg)
+    if mode == "fp":
+        stream = make_stream(dataset, vocab=VOCAB, seq_len=SEQ, global_batch=8,
+                             seed=seed)
+        t0 = time.time()
+        params, loss = _train_steps(lm, params, None, stream, steps, lr, full=True)
+        return cfg, params, {"s_per_step": (time.time() - t0) / steps,
+                             "trainable": count_params(params),
+                             "final_loss": loss}
+    trainable, frozen = split_params(params)
+    stream = make_stream(dataset, vocab=VOCAB, seq_len=SEQ, global_batch=8,
+                         seed=seed)
+    t0 = time.time()
+    trainable, loss = _train_steps(lm, trainable, frozen, stream, steps, lr)
+    return cfg, merge_params(trainable, frozen), {
+        "s_per_step": (time.time() - t0) / steps,
+        "trainable": count_params(trainable), "final_loss": loss}
+
+
+def answer_accuracy(cfg, params, dataset, batches=6, seed=999):
+    lm = LM(cfg)
+    stream = make_stream(dataset, vocab=VOCAB, seq_len=SEQ, global_batch=4,
+                         seed=seed)
+
+    @jax.jit
+    def lf(p, b):
+        x = lm._inputs_to_x(p, b)
+        h, _, _ = lm._trunk(p, x)
+        h = rmsnorm(p["final_ln"], h, cfg.norm_eps)
+        return lm._logits(p, h)
+
+    c = t = 0
+    for _ in range(batches):
+        toks, labs = stream.next_batch()
+        lg = lf(params, {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)})
+        pred = np.asarray(jnp.argmax(lg, -1))
+        labs = np.asarray(labs)
+        m = labs >= 0
+        c += int((pred[m] == labs[m]).sum())
+        t += int(m.sum())
+    return c / max(t, 1)
+
+
+def merge_for_deploy(params, pol):
+    from repro.launch.serve import merge_model
+    return merge_model(params, pol)
+
+
+def ptq_tree(params_fp_merged, bits, group):
+    """Post-training quantize every fp linear (the lossy QLoRA+PTQ step)."""
+    def walk(p, parent=""):
+        if isinstance(p, dict):
+            if set(p) == {"w"} and getattr(p["w"], "ndim", 0) >= 2 \
+                    and parent not in ("router", "mtp_proj"):
+                w = p["w"]
+                if w.shape[-2] % group == 0:
+                    qfn = lambda w_: quantize(w_, bits, group)
+                    for _ in w.shape[:-2]:
+                        qfn = jax.vmap(qfn)
+                    return {"q": qfn(w.astype(jnp.float32))}
+                return p
+            return {k: walk(v, k) for k, v in p.items()}
+        return p
+    return walk(params_fp_merged)

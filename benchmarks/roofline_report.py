@@ -1,0 +1,92 @@
+"""Roofline report generator: reads experiments/dryrun artifacts (json +
+hlo) and emits the per-(arch x shape x mesh) table for EXPERIMENTS.md.
+
+Run after `python -m repro.launch.dryrun --all --mesh pod --save-hlo`:
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      --dryrun-dir experiments/dryrun --out experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import repro.configs as C
+from repro.configs.base import SHAPES, cells_for
+from repro.perf import analyze_hlo_text, roofline_terms, HW
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+BOTTLENECK_FIX = {
+    "compute_s": "more TP (shrink per-chip matmul) or lower-precision MXU path",
+    "memory_s": "cut activation traffic: fused dequant-matmul kernel, less remat, bf16 scores",
+    "collective_s": "reshard to cut all-gathers (SP on residuals) / overlap with compute",
+}
+
+
+def analyze_cell(dryrun_dir: str, arch: str, cell_name: str, mesh: str = "pod"):
+    tag = f"{arch}__{cell_name}__{mesh}"
+    jpath = os.path.join(dryrun_dir, tag + ".json")
+    hpath = os.path.join(dryrun_dir, tag + ".hlo")
+    if not (os.path.exists(jpath) and os.path.exists(hpath)):
+        return None
+    with open(jpath) as f:
+        rec = json.load(f)
+    with open(hpath) as f:
+        cost = analyze_hlo_text(f.read())
+    cfg = C.get(arch)
+    cell = SHAPES[cell_name]
+    terms = roofline_terms(cost, rec["n_devices"], cfg, cell)
+    return {**rec, "hlo_cost": {
+        "flops_per_dev": cost.flops, "bytes_per_dev": cost.bytes,
+        "collective_bytes_per_dev": cost.collective_bytes,
+        "unknown_trips": cost.unknown_trip_counts}, **terms}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for arch in C.ASSIGNED:
+        for cell in cells_for(arch):
+            r = analyze_cell(args.dryrun_dir, arch, cell.name, args.mesh)
+            if r:
+                rows.append(r)
+
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "MODEL_FLOPS | useful | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant'].replace('_s','')} | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {BOTTLENECK_FIX[r['dominant']]} |")
+    table = "\n".join(lines)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(table + "\n")
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(table)
+    print(f"\n[{len(rows)} cells] -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""End-to-end driver example: the paper's full pipeline on a CPU.
+
+    PYTHONPATH=src python examples/finetune_llm.py
+
+1. "Pretrain" a small llama-proxy LM (stands in for the public LLaMA ckpt)
+2. Quantize the base to INT4 (group 32 scaled down) + attach QA-LoRA
+3. Fine-tune on an instruction dataset (with checkpointing + restart)
+4. Merge and compare the deployed INT4 model vs the fine-tuned one
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models import LM
+from repro.models.common import QuantPolicy
+from repro.core import convert_tree
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, split_params,
+                         merge_params, count_params)
+from repro.data import make_stream
+from repro.checkpoint import CheckpointManager
+from repro.launch.serve import merge_model
+
+VOCAB, SEQ = 64, 64
+
+# 1. pretrain fp ----------------------------------------------------------
+cfg_fp = C.reduced("llama7b-proxy", n_layers=2, vocab=VOCAB).scaled(
+    quant=QuantPolicy(mode="fp", dtype=jnp.float32))
+lm = LM(cfg_fp)
+params = lm.init(jax.random.PRNGKey(0))
+opt = adamw_init(params)
+ocfg = AdamWConfig(lr=5e-3, max_grad_norm=1.0)
+
+
+@jax.jit
+def pretrain_step(p, o, batch):
+    loss, g = jax.value_and_grad(lambda q: lm.loss(q, batch)[0])(p)
+    p, o, _ = adamw_update(ocfg, g, o, p)
+    return p, o, loss
+
+
+stream = make_stream("alpaca", vocab=VOCAB, seq_len=SEQ, global_batch=8)
+for i in range(300):
+    toks, labs = stream.next_batch()
+    params, opt, loss = pretrain_step(
+        params, opt, {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)})
+print(f"[1] pretrained base: loss={float(loss):.3f}")
+
+# 2. quantize + attach ----------------------------------------------------
+pol = QuantPolicy(mode="qalora", bits=4, group_size=16, rank=8,
+                  dtype=jnp.float32)
+qparams = convert_tree(params, pol, jax.random.PRNGKey(1))
+cfg = cfg_fp.scaled(quant=pol)
+lmq = LM(cfg)
+trainable, frozen = split_params(qparams)
+print(f"[2] INT4 base + adapters: trainable={count_params(trainable):,} "
+      f"({count_params(trainable) / max(count_params(qparams),1):.2%} of params)")
+
+# 3. fine-tune on an unseen dataset, with checkpoint/restart --------------
+ckpt_dir = os.path.join(tempfile.mkdtemp(), "qalora")
+ckpt = CheckpointManager(ckpt_dir, keep=2)
+fopt = adamw_init(trainable)
+focfg = AdamWConfig(lr=1e-2, max_grad_norm=1.0)
+
+
+@jax.jit
+def ft_step(tr, o, batch):
+    loss, g = jax.value_and_grad(
+        lambda t: lmq.loss(merge_params(t, frozen), batch)[0])(tr)
+    tr, o, _ = adamw_update(focfg, g, o, tr)
+    return tr, o, loss
+
+
+ft = make_stream("selfinst", vocab=VOCAB, seq_len=SEQ, global_batch=8)
+for i in range(200):
+    toks, labs = ft.next_batch()
+    trainable, fopt, loss = ft_step(
+        trainable, fopt, {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)})
+    if (i + 1) % 100 == 0:
+        ckpt.save(i + 1, {"t": trainable})
+ckpt.wait()
+print(f"[3] fine-tuned: loss={float(loss):.3f}, "
+      f"checkpoints at steps {ckpt.all_steps()}")
+
+# 4. merge for deployment -------------------------------------------------
+tuned = merge_params(trainable, frozen)
+deployed = merge_model(tuned, pol)
+toks, labs = ft.next_batch()
+batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+l_tuned, _ = jax.jit(lmq.loss)(tuned, batch)
+l_deploy, _ = jax.jit(lmq.loss)(deployed, batch)
+print(f"[4] loss fine-tuned={float(l_tuned):.5f} deployed-INT4={float(l_deploy):.5f} "
+      f"(delta {abs(float(l_tuned) - float(l_deploy)):.2e} — exact merge)")
+assert abs(float(l_tuned) - float(l_deploy)) < 1e-3
+print("OK")

@@ -1,0 +1,20 @@
+"""Lower + compile one production cell per family on the 16x16 pod mesh —
+a quick taste of the full multi-pod dry-run (see repro.launch.dryrun).
+
+    PYTHONPATH=src python examples/multiarch_dryrun.py
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_cell
+
+for arch, cell in [
+    ("gemma3-1b", "decode_32k"),      # dense GQA, sliding-window
+    ("rwkv6-7b", "long_500k"),        # attention-free, 500k context
+    ("deepseek-v3-671b", "decode_32k")  # MLA + 256-expert MoE
+]:
+    rec = run_cell(arch, cell, "pod", outdir="/tmp/qalora_dryrun", force=True)
+    print(f"{arch:20s} {cell:12s} flops/dev={rec['cost']['flops']:.2e} "
+          f"compile={rec['compile_s']}s")
+print("all example cells compiled against the 256-chip production mesh")

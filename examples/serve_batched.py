@@ -1,0 +1,12 @@
+"""Batched INT4 serving of a merged QA-LoRA model (deployment-side demo).
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Uses the serve driver: batch of requests, token-by-token decode with a KV
+cache, --verify asserts the merged model matches the adapter model.
+"""
+
+from repro.launch.serve import main
+
+main(["--arch", "gemma3-1b", "--reduced", "--requests", "4",
+      "--prompt-len", "12", "--gen-len", "6", "--verify"])

@@ -1,0 +1,170 @@
+"""Async, atomic, elastic checkpointing.
+
+Design for 1000+ nodes (DESIGN.md §6):
+
+* QA-LoRA makes the base model **immutable** — it is written once at job
+  start ("base" snapshot) and never again; per-step checkpoints contain
+  only adapters + optimizer state + data cursor (~1e-3 of model bytes),
+  so checkpoint cadence can be every-few-steps without I/O pressure.
+* **Async**: `save()` snapshots to host RAM (device_get) on the caller
+  thread, then a writer thread serializes — the train step resumes
+  immediately.
+* **Atomic**: writes go to `step_N.tmp/` and `os.replace` to `step_N/`;
+  a crashed writer never corrupts the latest checkpoint.
+* **Elastic**: arrays are stored with their *global* logical shapes; on
+  restore they are device_put with whatever sharding the new mesh asks
+  for — mesh size can change between runs (elastic scaling).
+* Retention keeps the newest K checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(tree, path: str):
+    """Synchronous atomic write of one pytree to `path/` (npz + structure)."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(a.dtype.name)
+        if a.dtype.kind == "V":  # ml_dtypes (bfloat16, fp8...): not npz-safe
+            a = a.view(np.uint8)
+        arrays[f"l{i}"] = a
+    np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+    with open(os.path.join(tmp, "treedef.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "n": len(leaves),
+                   "dtypes": dtypes}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like) -> Any:
+    """Restore into the structure of `like` (arrays placed per its shardings
+    if `like` leaves carry shardings, else host numpy)."""
+    import ml_dtypes  # jax dependency, always present
+    with open(os.path.join(path, "treedef.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "leaves.npz")) as z:
+        leaves = []
+        for i in range(meta["n"]):
+            a = z[f"l{i}"]
+            name = meta["dtypes"][i]
+            if a.dtype == np.uint8 and name != "uint8":
+                a = a.view(np.dtype(getattr(ml_dtypes, name)))
+            leaves.append(a)
+    like_leaves, treedef = _flatten(like)
+    assert len(leaves) == len(like_leaves), "checkpoint/model structure mismatch"
+    out = []
+    for arr, ref in zip(leaves, like_leaves):
+        if hasattr(ref, "sharding") and not isinstance(ref, np.ndarray):
+            out.append(jax.device_put(arr, ref.sharding))
+        else:
+            out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._async = async_write
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host_tree = item
+            try:
+                save_pytree(host_tree, self._step_dir(step))
+                self._gc()
+            except BaseException as e:  # surfaced on next save/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, tree):
+        """Non-blocking (async mode): snapshot to host and enqueue."""
+        if self._err:
+            raise self._err
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._async:
+            self._q.put((step, host))
+        else:
+            save_pytree(host, self._step_dir(step))
+            self._gc()
+
+    def save_base(self, tree):
+        """One-time immutable base-model snapshot (quantized weights)."""
+        p = os.path.join(self.dir, "base")
+        if not os.path.exists(p):
+            host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+            save_pytree(host, p)
+
+    def wait(self):
+        if self._async:
+            self._q.join()
+        if self._err:
+            raise self._err
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.all_steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like):
+        return load_pytree(self._step_dir(step), like)
+
+    def restore_base(self, like):
+        return load_pytree(os.path.join(self.dir, "base"), like)
+
+    def close(self):
+        if self._async:
+            self.wait()
+            self._q.put(None)
+            self._thread.join(timeout=5)

@@ -1,0 +1,105 @@
+"""Architecture config schema + the input-shape cells from the assignment."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.common import QuantPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # gqa | gqa_moe | mla_moe | mamba_hybrid | rwkv | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # attention
+    rope_theta: float = 1e4
+    window: Optional[int] = None          # sliding-window size (SWA archs)
+    global_every: int = 0                 # gemma3: every Nth layer is global
+    global_rope_theta: float = 1e6
+    qk_norm: bool = False
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    n_dense_layers: int = 0
+    routing: str = "softmax"              # softmax | sigmoid (aux-free)
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    moe_chunk: int = 512
+    # mla
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    attn_every: int = 0                   # zamba2: shared attn after every N mamba
+    ssm_chunk: int = 128
+    # enc-dec
+    n_enc_layers: int = 0
+    source_frac: float = 0.5              # fraction of seq_len that is source
+    gated_mlp: bool = True
+    act: str = "silu"
+    # frontend stub ("vision" | "audio" | None): precomputed embeddings input
+    frontend: Optional[str] = None
+    frontend_len: int = 256               # patches/frames prepended to the LM
+    # policy
+    quant: QuantPolicy = QuantPolicy()
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: bool = True
+    # sequence-parallel residual stream between layers. Measured (§Perf):
+    # helps full-attention archs with large d_model (activation-stack cut),
+    # pessimizes chunked-recurrence mixers (SSM/WKV re-gather the sequence
+    # every layer) and small/window archs — hence per-arch.
+    seq_parallel: bool = True
+    # attention chunking (flash)
+    chunk_q: int = 256
+    chunk_k: int = 1024
+    # loss
+    xent_chunk: int = 512
+
+    def scaled(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str        # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# archs with sub-quadratic attention run long_500k (DESIGN.md shape skips)
+SUBQUADRATIC = {"gemma3-1b", "h2o-danube-1.8b", "zamba2-7b", "mixtral-8x22b", "rwkv6-7b"}
+
+
+def cells_for(arch_name: str):
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and arch_name not in SUBQUADRATIC:
+            continue
+        out.append(s)
+    return out

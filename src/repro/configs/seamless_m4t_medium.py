@@ -1,0 +1,28 @@
+"""seamless-m4t-medium [audio] — enc-dec, 12+12L d_model=1024 16H (kv=16)
+head_dim=64 d_ff=4096 vocab=256206 [arXiv:2308.11596].  The audio frontend
+is a stub: ``input_specs`` supplies precomputed frame embeddings as the
+encoder input (assignment rule)."""
+
+import jax.numpy as jnp
+
+from repro.models.common import QuantPolicy
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,          # decoder
+    n_enc_layers=12,      # encoder
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=256206,
+    gated_mlp=False,
+    act="relu",
+    frontend="audio",
+    source_frac=0.5,
+    quant=QuantPolicy(bits=4, group_size=32, rank=64,
+                      dtype=jnp.bfloat16, scale_dtype=jnp.bfloat16),
+)

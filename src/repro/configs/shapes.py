@@ -1,0 +1,66 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every
+(architecture x shape) cell — nothing here allocates device memory.
+
+``input_specs(cfg, cell)`` returns (step_kind, kwargs) where kwargs feed
+``train_step`` / ``prefill`` / ``decode_step`` respectively.  Frontend
+stubs per the assignment: vlm cells get precomputed patch embeddings,
+audio enc-dec cells get precomputed frame embeddings as ``src``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.lm import LM
+
+
+def _s(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, with_labels: bool = True):
+    b, s = cell.global_batch, cell.seq_len
+    dt = cfg.quant.dtype
+    if cfg.family == "encdec":
+        src_len = int(s * cfg.source_frac)
+        tgt = s - src_len
+        out = {"tokens": _s((b, tgt), jnp.int32),
+               "src": _s((b, src_len, cfg.d_model), dt)}
+        if with_labels:
+            out["labels"] = _s((b, tgt), jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        st = s - cfg.frontend_len
+        out = {"tokens": _s((b, st), jnp.int32),
+               "frontend": _s((b, cfg.frontend_len, cfg.d_model), dt)}
+        if with_labels:
+            out["labels"] = _s((b, st), jnp.int32)
+        return out
+    out = {"tokens": _s((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = _s((b, s), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cell: ShapeCell):
+    lm = LM(cfg)
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cell.global_batch, cell.seq_len))
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Tuple[str, Dict[str, Any]]:
+    if cell.kind == "train":
+        return "train", {"batch": batch_specs(cfg, cell, with_labels=True)}
+    if cell.kind == "prefill":
+        return "prefill", {"batch": batch_specs(cfg, cell, with_labels=False)}
+    if cell.kind == "decode":
+        return "decode", {
+            "cache": cache_specs(cfg, cell),
+            "tokens": _s((cell.global_batch, 1), jnp.int32),
+        }
+    raise ValueError(cell.kind)

@@ -1,0 +1,31 @@
+"""zamba2-7b [hybrid] — 81L d_model=3584, Mamba2 backbone (ssm_state=64)
+with a shared attention+MLP block applied every 6th layer (32H kv=32,
+d_ff=14336, vocab=32000) [arXiv:2411.15242].
+
+QA-LoRA synergy: the shared attention block's *quantized base* is stored
+once; Zamba2's per-depth LoRA specialization maps naturally onto QA-LoRA
+adapters (DESIGN.md §Arch-applicability)."""
+
+import jax.numpy as jnp
+
+from repro.models.common import QuantPolicy
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="mamba_hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    attn_every=6,
+    rope_theta=1e4,
+    seq_parallel=False,  # §Perf: measured regression with SP
+    quant=QuantPolicy(bits=4, group_size=32, rank=64,
+                      dtype=jnp.bfloat16, scale_dtype=jnp.bfloat16),
+)

@@ -1,0 +1,33 @@
+"""QA-LoRA core: group-wise quantization + group-pooled low-rank adaptation."""
+
+from .quant import (  # noqa: F401
+    QuantizedLinear,
+    quantize,
+    dequantize,
+    pack,
+    unpack,
+    abstract_quantized,
+)
+from .qalora import (  # noqa: F401
+    QALoRAParams,
+    init_qalora,
+    abstract_qalora,
+    group_pool,
+    adapter_delta,
+    qalora_forward,
+    merge,
+    attach,
+)
+from .lora import (  # noqa: F401
+    LoRAParams,
+    init_lora,
+    lora_forward,
+    lora_merge,
+    qlora_quantize_base,
+    qlora_forward,
+    qlora_merge_fp,
+    qlora_merge_ptq,
+)
+from .gptq import gptq_quantize, gptq_quantize_from_calibration  # noqa: F401
+from .convert import convert_tree  # noqa: F401
+from .nf4 import NF4Tensor, nf4_quantize, nf4_dequantize  # noqa: F401

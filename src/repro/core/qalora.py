@@ -1,0 +1,119 @@
+"""QA-LoRA: the paper's contribution (Sec. 3.3 + Appendix B).
+
+A frozen group-wise-quantized base linear (:class:`QuantizedLinear`) plus a
+group-pooled low-rank adapter:
+
+    y = x @ dequant(W_q)  +  s * pool_sum(x) @ A @ B
+
+where ``pool_sum`` sums activations within each quantization group
+(paper Algorithm 1: ``AvgPool1d(D_in//L) * (D_in//L)``), ``A`` is
+``[L, r]`` and ``B`` is ``[r, D_out]``.  Because the adapter's effective
+full-rank weight ``G @ A @ B`` (``G`` = group indicator) is constant within
+each group, it folds exactly into the quantization zero points:
+
+    zero' = zero + s * (A @ B)        (per (group, column))
+
+so the merged model keeps its integer codes and scales bit-identical and
+remains INT-N — the property QLoRA loses (Appendix B, Eq. 7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quant import QuantizedLinear, dequantize, quantize
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QALoRAParams:
+    """Trainable adapter state for one linear layer."""
+
+    a: jax.Array  # [L, r]
+    b: jax.Array  # [r, D_out]
+
+
+def init_qalora(
+    key: jax.Array, n_groups: int, rank: int, d_out: int, dtype=jnp.float32
+) -> QALoRAParams:
+    """Standard LoRA init: A ~ N(0, 1/L) (kaiming-ish), B = 0 -> adapter starts as identity."""
+    a = jax.random.normal(key, (n_groups, rank), dtype) * (1.0 / jnp.sqrt(n_groups))
+    b = jnp.zeros((rank, d_out), dtype)
+    return QALoRAParams(a=a, b=b)
+
+
+def abstract_qalora(n_groups: int, rank: int, d_out: int, dtype=jnp.bfloat16) -> QALoRAParams:
+    return QALoRAParams(
+        a=jax.ShapeDtypeStruct((n_groups, rank), dtype),
+        b=jax.ShapeDtypeStruct((rank, d_out), dtype),
+    )
+
+
+def group_pool(x: jax.Array, group_size: int) -> jax.Array:
+    """Sum-pool the trailing feature dim over quantization groups.
+
+    ``[..., D_in] -> [..., D_in // group_size]``.  Parameter-free; this is
+    what constrains the adapter's rows to be group-constant.
+    """
+    *lead, d_in = x.shape
+    assert d_in % group_size == 0, (d_in, group_size)
+    return x.reshape(*lead, d_in // group_size, group_size).sum(axis=-1)
+
+
+def adapter_delta(x: jax.Array, p: QALoRAParams, s: float, group_size: int) -> jax.Array:
+    """The QA-LoRA side path: ``s * pool_sum(x) @ A @ B``."""
+    pooled = group_pool(x, group_size)
+    return (pooled @ p.a.astype(x.dtype)) @ p.b.astype(x.dtype) * s
+
+
+def qalora_forward(
+    x: jax.Array,
+    qt: QuantizedLinear,
+    p: QALoRAParams,
+    s: float,
+    compute_dtype=None,
+) -> jax.Array:
+    """Reference (pure-jnp) fine-tuning/serving forward."""
+    dtype = compute_dtype or x.dtype
+    w = dequantize(qt, dtype)
+    return x.astype(dtype) @ w + adapter_delta(x.astype(dtype), p, s, qt.group_size)
+
+
+def merge(qt: QuantizedLinear, p: QALoRAParams, s: float) -> QuantizedLinear:
+    """Fold the adapter into the quantized layer (Appendix B, Eq. 7).
+
+    Only the zero points change; ``qweight`` / ``scale`` are reused
+    (no copy, no re-quantization, no PTQ -> zero accuracy loss).
+    """
+    delta = (p.a.astype(jnp.float32) @ p.b.astype(jnp.float32)) * s  # [L, D_out]
+    return QuantizedLinear(
+        qweight=qt.qweight,
+        scale=qt.scale,
+        zero=(qt.zero.astype(jnp.float32) + delta).astype(qt.zero.dtype),
+        bits=qt.bits,
+        group_size=qt.group_size,
+    )
+
+
+def attach(
+    key: jax.Array,
+    w: jax.Array,
+    bits: int,
+    group_size: int,
+    rank: int,
+    dtype=jnp.float32,
+    quantizer=None,
+):
+    """Quantize a pretrained float weight and create its adapter.
+
+    ``quantizer`` defaults to RTN (:func:`repro.core.quant.quantize`); pass
+    a GPTQ closure to match the paper's main setting.
+    """
+    qfn = quantizer or (lambda w_: quantize(w_, bits, group_size, scale_dtype=dtype))
+    qt = qfn(w)
+    p = init_qalora(key, qt.n_groups, rank, qt.d_out, dtype)
+    return qt, p

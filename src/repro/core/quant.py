@@ -1,0 +1,184 @@
+"""Group-wise asymmetric min-max quantization (INT2/3/4/8) with bit packing.
+
+Conventions
+-----------
+Weights are stored as ``W`` of shape ``[D_in, D_out]`` and used as
+``y = x @ W``.  Quantization groups partition the **input** dimension
+(axis 0) into ``L = D_in // group_size`` groups; each ``(group, column)``
+pair owns one scale ``alpha`` and one zero ``beta`` (paper Sec. 3.3):
+
+    q       = round((w - beta) / alpha)            in {0, ..., 2^bits - 1}
+    dequant = alpha * q + beta
+
+``beta`` is stored in *float* units (the group minimum), which is exactly
+what makes the QA-LoRA merge exact: merging only rewrites ``beta`` by a
+real-valued constant per (group, column) and never touches the integer
+codes or scales (paper Appendix B).
+
+Packed storage
+--------------
+INT4 packs 2 codes/byte and INT2 packs 4 codes/byte along axis 0.  INT3 is
+stored one code per byte (TPU-side a 3-bit stream pays unaligned-access
+cost that outweighs the 2.6x->8/3 saving; documented trade-off).  INT8 is
+identity.  All pack/unpack helpers are jittable and shape-polymorphic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantizedLinear",
+    "quantize",
+    "dequantize",
+    "pack",
+    "unpack",
+    "codes_per_byte",
+    "packed_rows",
+]
+
+
+def codes_per_byte(bits: int) -> int:
+    """How many quantized codes fit in one storage byte."""
+    return {2: 4, 3: 1, 4: 2, 8: 1}[bits]
+
+
+def packed_rows(d_in: int, bits: int) -> int:
+    cpb = codes_per_byte(bits)
+    assert d_in % cpb == 0, (d_in, bits)
+    return d_in // cpb
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedLinear:
+    """A frozen, quantized linear layer's storage.
+
+    ``qweight``: uint8 ``[D_in / codes_per_byte(bits), D_out]`` packed codes.
+    ``scale`` / ``zero``: ``[L, D_out]`` per-(group, column) factors.
+    """
+
+    qweight: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def d_in(self) -> int:
+        return self.qweight.shape[0] * codes_per_byte(self.bits)
+
+    @property
+    def d_out(self) -> int:
+        return self.qweight.shape[1]
+
+    @property
+    def n_groups(self) -> int:
+        return self.scale.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+def pack(q: jax.Array, bits: int) -> jax.Array:
+    """Pack integer codes (values < 2**bits) along axis 0 into uint8."""
+    q = q.astype(jnp.uint8)
+    cpb = codes_per_byte(bits)
+    if cpb == 1:
+        return q
+    d_in = q.shape[0]
+    assert d_in % cpb == 0, (d_in, bits)
+    q = q.reshape((d_in // cpb, cpb) + q.shape[1:])
+    out = q[:, 0]
+    for k in range(1, cpb):
+        out = out | (q[:, k] << (bits * k))
+    return out
+
+
+def unpack(packed: jax.Array, bits: int) -> jax.Array:
+    """Inverse of :func:`pack`; returns uint8 codes along axis 0."""
+    cpb = codes_per_byte(bits)
+    if cpb == 1:
+        return packed
+    mask = jnp.uint8(2**bits - 1)
+    parts = [(packed >> (bits * k)) & mask for k in range(cpb)]
+    stacked = jnp.stack(parts, axis=1)  # [rows, cpb, ...]
+    return stacked.reshape((packed.shape[0] * cpb,) + packed.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "scale_dtype"))
+def quantize(
+    w: jax.Array,
+    bits: int,
+    group_size: int,
+    scale_dtype: jnp.dtype = jnp.float32,
+) -> QuantizedLinear:
+    """Group-wise asymmetric min-max (RTN) quantization of ``w [D_in, D_out]``."""
+    d_in, d_out = w.shape
+    assert d_in % group_size == 0, (d_in, group_size)
+    n_groups = d_in // group_size
+    levels = 2**bits - 1
+
+    wg = w.astype(jnp.float32).reshape(n_groups, group_size, d_out)
+    w_min = wg.min(axis=1)  # [L, D_out]
+    w_max = wg.max(axis=1)
+    scale = (w_max - w_min) / levels
+    # guard degenerate all-equal groups
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    zero = w_min
+
+    q = jnp.round((wg - zero[:, None, :]) / scale[:, None, :])
+    q = jnp.clip(q, 0, levels).astype(jnp.uint8).reshape(d_in, d_out)
+    return QuantizedLinear(
+        qweight=pack(q, bits),
+        scale=scale.astype(scale_dtype),
+        zero=zero.astype(scale_dtype),
+        bits=bits,
+        group_size=group_size,
+    )
+
+
+def dequantize(qt: QuantizedLinear, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Reconstruct the float weight ``[D_in, D_out]``."""
+    q = unpack(qt.qweight, qt.bits).astype(jnp.float32)
+    d_in, d_out = q.shape
+    q = q.reshape(qt.n_groups, qt.group_size, d_out)
+    w = q * qt.scale.astype(jnp.float32)[:, None, :] + qt.zero.astype(jnp.float32)[:, None, :]
+    return w.reshape(d_in, d_out).astype(dtype)
+
+
+def quantization_error(w: jax.Array, bits: int, group_size: int) -> jax.Array:
+    """Mean squared RTN quantization error (used by tests & GPTQ comparison)."""
+    qt = quantize(w, bits, group_size)
+    return jnp.mean((dequantize(qt) - w.astype(jnp.float32)) ** 2)
+
+
+def abstract_quantized(
+    d_in: int,
+    d_out: int,
+    bits: int,
+    group_size: int,
+    scale_dtype: jnp.dtype = jnp.bfloat16,
+) -> QuantizedLinear:
+    """ShapeDtypeStruct stand-in (for dry-runs; allocates nothing)."""
+    n_groups = d_in // group_size
+    return QuantizedLinear(
+        qweight=jax.ShapeDtypeStruct((packed_rows(d_in, bits), d_out), jnp.uint8),
+        scale=jax.ShapeDtypeStruct((n_groups, d_out), scale_dtype),
+        zero=jax.ShapeDtypeStruct((n_groups, d_out), scale_dtype),
+        bits=bits,
+        group_size=group_size,
+    )

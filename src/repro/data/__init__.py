@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, InstructionStream, make_stream  # noqa: F401

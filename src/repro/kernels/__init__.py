@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the quantized compute hot-spots.
+
+``qmatmul``       — group-wise WxA16 dequant matmul (x @ dequant(W_q))
+``qalora_matmul`` — fused base matmul + group-pooled LoRA adapter
+
+Each has a pure-jnp oracle in :mod:`repro.kernels.ref`; CPU validation
+runs with ``interpret=True``.
+"""
+
+from .ops import qmatmul, qalora_matmul, flash_mha, pick_blocks  # noqa: F401
+from .ref import qmatmul_ref, qalora_matmul_ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal/windowed flash attention.
+
+The roofline table (EXPERIMENTS.md §Roofline) shows f32 score traffic from
+the jnp chunked-attention path as the dominant memory term on several
+train/prefill cells.  This kernel keeps the online-softmax state (m, l,
+acc) in VMEM scratch across the KV grid dimension, so score tiles never
+round-trip HBM — the standard flash schedule, tiled for the MXU
+(block_q x block_k multiples of 128 on real hardware).
+
+Grid = (B*H, Sq/bq, Sk/bk), KV innermost.  Sliding windows skip nothing
+structurally (grid is static) but masked tiles cost only the VPU mask.
+
+ops.py exposes `flash_mha(q, k, v, causal=..., window=...)`; the oracle is
+`repro.models.attention.flash_attention` (itself validated against naive
+softmax in tests/test_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, n_k: int,
+                  block_q: int, block_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [bq, d]
+    k = k_ref[0]  # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    iq = pl.program_id(1)
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]          # [bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_mha_pallas(q, k, v, *, causal=True, window=0, scale=None,
+                     block_q=128, block_k=128, interpret=False):
+    """q/k/v: [BH, S, d] (heads pre-flattened into the batch dim)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    n_k = sk // block_k
+    grid = (bh, sq // block_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=float(scale), causal=causal,
+        window=int(window or 0), n_k=n_k, block_q=block_q, block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles leading-dim flattening, M-padding to the block size, block-shape
+heuristics (MXU-aligned 128-multiples that divide the model dims), and the
+CPU fallback: ``interpret=True`` executes the kernel body in Python on CPU
+so correctness is testable everywhere; on TPU the same code lowers to
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedLinear, codes_per_byte
+from repro.core.qalora import QALoRAParams
+
+from .qmatmul import qmatmul_pallas
+from .qalora_fused import qalora_matmul_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _largest_divisor(n: int, cap: int, mult: int) -> int:
+    """Largest d <= cap with d | n and mult | d (mult must divide n)."""
+    assert n % mult == 0, (n, mult)
+    best = mult
+    d = mult
+    while d <= min(cap, n):
+        if n % d == 0:
+            best = d
+        d += mult
+    return best
+
+
+def pick_blocks(m: int, k: int, n: int, bits: int, group_size: int,
+                rank: int = 0):
+    """VMEM-budgeted, MXU-aligned block shapes (see DESIGN.md Sec. 2)."""
+    cpb = codes_per_byte(bits)
+    kmult = group_size * cpb // math.gcd(group_size, cpb)
+    block_k = _largest_divisor(k, 512, kmult)
+    block_n = _largest_divisor(n, 256, 128 if n % 128 == 0 else 8)
+    block_m = min(128, m) if m % min(128, m) == 0 else min(128, m)
+    # x + unpacked w + acc must fit VMEM comfortably (<2MB at defaults)
+    return block_m, block_n, block_k
+
+
+def _flatten_pad(x, block_m_cap: int = 128):
+    *lead, k = x.shape
+    m = int(math.prod(lead)) if lead else 1
+    x2 = x.reshape(m, k)
+    bm = min(block_m_cap, m)
+    pad = (-m) % bm
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, lead, m, bm
+
+
+@functools.partial(jax.jit, static_argnames=("s", "out_dtype", "interpret"))
+def qmatmul(x, qt: QuantizedLinear, s=None, out_dtype=None, interpret=None):
+    """y = x @ dequant(qt); any leading dims on x."""
+    interpret = _default_interpret() if interpret is None else interpret
+    x2, lead, m, bm = _flatten_pad(x)
+    k, n = qt.d_in, qt.d_out
+    _, bn, bk = pick_blocks(x2.shape[0], k, n, qt.bits, qt.group_size)
+    y = qmatmul_pallas(
+        x2, qt.qweight, qt.scale, qt.zero, bits=qt.bits,
+        group_size=qt.group_size, block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype or x.dtype, interpret=interpret)
+    return y[:m].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                              "block_q", "block_k"))
+def flash_mha(q, k, v, causal=True, window=0, interpret=None,
+              block_q=128, block_k=128):
+    """Flash attention, q/k/v: [B, S, H, d] (MHA; expand GQA kv first).
+
+    Kernel path for TPU; interpret=True (default off-TPU) for validation.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    from .flash import flash_mha_pallas
+    b, sq, h, d = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, t.shape[1], d)
+    o = flash_mha_pallas(fold(q), fold(k), fold(v), causal=causal,
+                         window=window, block_q=min(block_q, sq),
+                         block_k=min(block_k, k.shape[1]),
+                         interpret=interpret)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "out_dtype", "interpret"))
+def qalora_matmul(x, qt: QuantizedLinear, p: QALoRAParams, s: float = 1.0,
+                  out_dtype=None, interpret=None):
+    """Fused y = x @ dequant(qt) + s * pool_sum(x) @ A @ B."""
+    interpret = _default_interpret() if interpret is None else interpret
+    x2, lead, m, bm = _flatten_pad(x)
+    k, n = qt.d_in, qt.d_out
+    _, bn, bk = pick_blocks(x2.shape[0], k, n, qt.bits, qt.group_size)
+    y = qalora_matmul_pallas(
+        x2, qt.qweight, qt.scale, qt.zero, p.a, p.b, s=float(s),
+        bits=qt.bits, group_size=qt.group_size,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype or x.dtype, interpret=interpret)
+    return y[:m].reshape(*lead, n)

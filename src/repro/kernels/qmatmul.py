@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: group-wise-quantized matmul  y = x @ dequant(W_q).
+
+TPU adaptation of the paper's CUDA INT4 matmul (DESIGN.md Sec. 2): packed
+codes stream HBM->VMEM tile-by-tile (BlockSpec), the VPU unpacks nibbles
+and applies the per-(group, column) affine dequant, and bf16 tiles feed
+the MXU.  The win is HBM bandwidth: INT4 moves ~3.6x fewer weight bytes
+than bf16, which is the dominant roofline term for decode / long-context.
+
+Grid = (M/bm, N/bn, K/bk), K innermost; partial products accumulate in an
+f32 VMEM scratch and are written out once on the last K step.
+
+Constraints (asserted in ops.py): bk % group_size == 0,
+bk % codes_per_byte == 0, and the usual 128-multiple MXU alignment for
+bm/bn/bk on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import codes_per_byte
+
+
+def _unpack_block(qw_blk, bits: int, bk: int):
+    """uint8 packed [bk/cpb, bn] -> codes f32-able uint8 [bk, bn].
+
+    Code t of byte row r sits at logical row r*cpb + t, matching
+    :func:`repro.core.quant.pack` (reshape-interleave, axis 0).
+    """
+    cpb = codes_per_byte(bits)
+    if cpb == 1:
+        return qw_blk
+    mask = jnp.uint8(2**bits - 1)
+    parts = [(qw_blk >> (bits * t)) & mask for t in range(cpb)]
+    stacked = jnp.stack(parts, axis=1)  # [bk/cpb, cpb, bn]
+    return stacked.reshape(bk, qw_blk.shape[-1])
+
+
+def _dequant_block(qw_blk, scale_blk, zero_blk, bits: int, bk: int, group_size: int,
+                   dtype=jnp.bfloat16):
+    """Affine-dequantize one [bk, bn] weight tile (scale/zero are [bk/g, bn])."""
+    codes = _unpack_block(qw_blk, bits, bk).astype(jnp.float32)
+    g = group_size
+    bn = codes.shape[-1]
+    grouped = codes.reshape(bk // g, g, bn)
+    w = grouped * scale_blk.astype(jnp.float32)[:, None, :] + zero_blk.astype(jnp.float32)[:, None, :]
+    return w.reshape(bk, bn).astype(dtype)
+
+
+def _qmatmul_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref, *,
+                    bits: int, group_size: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bk = x_ref.shape[-1]
+    w = _dequant_block(qw_ref[...], scale_ref[...], zero_ref[...],
+                       bits, bk, group_size, dtype=x_ref.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def qmatmul_pallas(x, qweight, scale, zero, *, bits: int, group_size: int,
+                   block_m: int, block_n: int, block_k: int,
+                   out_dtype=None, interpret: bool = False):
+    """Raw pallas_call; use :mod:`repro.kernels.ops` for the padded wrapper."""
+    m, k_dim = x.shape
+    n = qweight.shape[1]
+    cpb = codes_per_byte(bits)
+    n_k = k_dim // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    out_dtype = out_dtype or x.dtype
+
+    kernel = functools.partial(
+        _qmatmul_kernel, bits=bits, group_size=group_size, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k // cpb, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # f32 accumulator lives in VMEM across the K loop
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, qweight, scale, zero)

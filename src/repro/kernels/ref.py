@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every kernel in this package (tests assert_allclose
+against these across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedLinear, dequantize
+from repro.core.qalora import QALoRAParams, adapter_delta
+
+
+def qmatmul_ref(x, qt: QuantizedLinear, out_dtype=None):
+    """y = x @ dequant(W_q), computed in f32."""
+    w = dequantize(qt, jnp.float32)
+    y = x.astype(jnp.float32) @ w
+    return y.astype(out_dtype or x.dtype)
+
+
+def qalora_matmul_ref(x, qt: QuantizedLinear, p: QALoRAParams, s: float, out_dtype=None):
+    """y = x @ dequant(W_q) + s * pool_sum(x) @ A @ B, computed in f32."""
+    y = qmatmul_ref(x, qt, jnp.float32)
+    y = y + adapter_delta(
+        x.astype(jnp.float32),
+        QALoRAParams(a=p.a.astype(jnp.float32), b=p.b.astype(jnp.float32)),
+        s,
+        qt.group_size,
+    )
+    return y.astype(out_dtype or x.dtype)

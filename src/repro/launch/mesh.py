@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis crosses the inter-pod DCI links, so only data-parallel traffic
+(adapter-gradient all-reduce, periodic compressed sync) rides it.
+
+Functions, not module constants: importing this module never touches JAX
+device state (the dry-run must set XLA_FLAGS before first device init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(data: int = 1, model: int = 1):
+    """Degenerate mesh for CPU smoke/e2e runs."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,5 @@
+"""Model zoo: pure-pytree, scan-over-layers implementations of every
+assigned architecture family, with QA-LoRA as a config switch."""
+
+from .common import QuantPolicy, FP  # noqa: F401
+from .lm import LM  # noqa: F401

@@ -1,0 +1,379 @@
+"""Attention variants: GQA (+RoPE, sliding window), chunked flash for long
+sequences, decode with KV cache, and DeepSeek-style MLA with the absorbed
+decode path.
+
+All projections route through ``linear_apply`` so QA-LoRA (or any baseline
+mode) applies uniformly.  Long-sequence memory is kept sub-quadratic with a
+two-level scan (q-chunks x kv-chunks, running-softmax) — the jnp analogue
+of flash attention; on TPU this stays in VMEM-sized tiles after XLA fusion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, rope, constrain
+from .scan_utils import cscan, cmap
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+
+def _mask(qpos, kpos, causal: bool, window):
+    """window: None (full), python int, or traced scalar (0 = full attention
+    — lets a scanned per-layer window drive gemma3's local:global pattern)."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        active = window > 0
+        wm = kpos[None, :] > (qpos[:, None] - window)
+        m &= wm | ~active
+    return m
+
+
+def _tp_size() -> int:
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return mesh.shape.get("model", 1) if not mesh.empty else 1
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    chunk_q=256, chunk_k=1024, scale=None):
+    """q: [B,Sq,H,Dq]  k: [B,Sk,KvH,Dq]  v: [B,Sk,KvH,Dv] -> [B,Sq,H,Dv].
+
+    H must be a multiple of KvH (GQA).  Memory: O(chunk_q * chunk_k) scores.
+
+    PERF: when the kv-head count can't shard over the model axis but the
+    full head count can, the GQA [H]->[KvH,G] grouping strands the score
+    tensors replicated (found 16x attention-byte waste on deepseek-67b
+    train_4k — EXPERIMENTS.md §Perf).  Expanding KV to H heads costs one
+    O(B*S*H*hd) broadcast but lets every score/context tensor shard.
+    """
+    b, sq, h, dq = q.shape
+    _, sk, kvh, _ = k.shape
+    tp = _tp_size()
+    if kvh < h and kvh % tp != 0 and h % tp == 0:
+        g_exp = h // kvh
+        k = jnp.repeat(k, g_exp, axis=2)
+        v = jnp.repeat(v, g_exp, axis=2)
+        k = constrain(k, ("data", None, "model", None))
+        v = constrain(v, ("data", None, "model", None))
+        kvh = h
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(dq)
+
+    chunk_q = min(chunk_q, sq)
+    chunk_k = min(chunk_k, sk)
+    assert sq % chunk_q == 0 and sk % chunk_k == 0, (sq, chunk_q, sk, chunk_k)
+    nq, nk = sq // chunk_q, sk // chunk_k
+
+    qc = q.reshape(b, nq, chunk_q, kvh, g, dq).transpose(1, 0, 3, 4, 2, 5)
+    # [nq, B, KvH, G, cq, Dq]
+    kc = k.reshape(b, nk, chunk_k, kvh, dq).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, chunk_k, kvh, dv).transpose(1, 0, 3, 2, 4)
+    # [nk, B, KvH, ck, D*]
+
+    def q_step(qi, q_blk):
+        qpos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, xs):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = xs
+            kpos = ki * chunk_k + jnp.arange(chunk_k)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            msk = _mask(qpos, kpos, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((b, kvh, g, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, g, chunk_q), jnp.float32),
+                jnp.zeros((b, kvh, g, chunk_q, dv), jnp.float32))
+        (m_run, l_run, acc), _ = cscan(
+            kv_step, init, (jnp.arange(nk), kc, vc), name="flash_kv")
+        out = acc / jnp.maximum(l_run[..., None], 1e-37)
+        return out  # [B, KvH, G, cq, Dv]
+
+    outs = cmap(lambda xs: q_step(*xs), (jnp.arange(nq), qc), name="flash_q")
+    # [nq, B, KvH, G, cq, Dv] -> [B, Sq, H, Dv]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=None):
+    """One-token attention. q: [B,1,H,Dq]; caches: [B,S,KvH,D*]."""
+    b, _, h, dq = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, dq)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / math.sqrt(dq)
+    kpos = jnp.arange(s)
+    valid = kpos[None, :] < cur_len[:, None]  # [B, S]
+    if window is not None:
+        active = window > 0
+        valid &= (kpos[None, :] > (cur_len[:, None] - 1 - window)) | ~active
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    window: Optional[int] = None  # sliding window; None = full causal
+    qk_norm: bool = False
+
+
+def gqa_init(key, cfg: AttnConfig, pol: QuantPolicy):
+    ks = jax.random.split(key, 4)
+    h, kvh, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": linear_init(ks[0], d, h * hd, pol),
+        "wk": linear_init(ks[1], d, kvh * hd, pol),
+        "wv": linear_init(ks[2], d, kvh * hd, pol),
+        "wo": linear_init(ks[3], h * hd, d, pol),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rmsnorm_init(hd)
+        p["kn"] = rmsnorm_init(hd)
+    return p
+
+
+def _qkv(p, x, cfg: AttnConfig, pol, positions, theta=None):
+    b, s, _ = x.shape
+    theta = cfg.rope_theta if theta is None else theta
+    q = linear_apply(p["wq"], x, pol).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = linear_apply(p["wk"], x, pol).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = linear_apply(p["wv"], x, pol).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if "qn" in p:
+        q, k = rmsnorm(p["qn"], q), rmsnorm(p["kn"], k)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    q = constrain(q, ("data", None, "model", None))
+    k = constrain(k, ("data", None, "model", None))
+    v = constrain(v, ("data", None, "model", None))
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg: AttnConfig, pol: QuantPolicy, positions=None,
+              window=None, theta=None, causal=True, chunk_q=256, chunk_k=1024):
+    """Training / prefill self-attention; returns (out, new_kv).
+
+    ``window``/``theta`` override cfg (may be traced per-layer scalars)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, pol, positions, theta)
+    window = cfg.window if window is None else window
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        chunk_q=chunk_q, chunk_k=chunk_k)
+    out = linear_apply(p["wo"], o.reshape(b, s, -1), pol)
+    return out, (k, v)
+
+
+def gqa_decode(p, x, cache, cur_len, cfg: AttnConfig, pol: QuantPolicy,
+               window=None, theta=None):
+    """x: [B,1,d]; cache: dict(k,v: [B,S,KvH,hd]); cur_len: [B] tokens so far."""
+    b = x.shape[0]
+    positions = cur_len[:, None]  # [B,1]
+    q, k, v = _qkv(p, x, cfg, pol, positions, theta)
+    # per-example cur_len insert via one-hot to stay batched:
+    kc = _insert_token(cache["k"], k, cur_len)
+    vc = _insert_token(cache["v"], v, cur_len)
+    window = cfg.window if window is None else window
+    o = decode_attention(q, kc, vc, cur_len + 1, window=window)
+    out = linear_apply(p["wo"], o.reshape(b, 1, -1), pol)
+    return out, {"k": kc, "v": vc}
+
+
+def _insert_token(cache, new, cur_len):
+    """cache [B,S,...], new [B,1,...]: write new at position cur_len[b]."""
+    s = cache.shape[1]
+    onehot = (jnp.arange(s)[None, :] == cur_len[:, None])
+    oh = onehot.reshape(onehot.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(oh, new.astype(cache.dtype), cache)
+
+
+def gqa_init_cache(batch: int, seq: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_init(key, cfg: AttnConfig, pol: QuantPolicy):
+    return gqa_init(key, cfg, pol)
+
+
+def cross_kv(p, mem, cfg: AttnConfig, pol: QuantPolicy):
+    """Precompute K/V from encoder memory (reused across decode steps)."""
+    b, s, _ = mem.shape
+    k = linear_apply(p["wk"], mem, pol).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = linear_apply(p["wv"], mem, pol).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def cross_apply(p, x, k_mem, v_mem, cfg: AttnConfig, pol: QuantPolicy,
+                chunk_q=256, chunk_k=1024):
+    """No rope, no causality: queries attend to the full encoder memory."""
+    b, s, _ = x.shape
+    q = linear_apply(p["wq"], x, pol).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if s == 1:
+        o = decode_attention(q, k_mem, v_mem,
+                             jnp.full((b,), k_mem.shape[1], jnp.int32))
+    else:
+        o = flash_attention(q, k_mem, v_mem, causal=False,
+                            chunk_q=chunk_q, chunk_k=chunk_k)
+    return linear_apply(p["wo"], o.reshape(b, s, -1), pol)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+
+
+def mla_init(key, cfg: MLAConfig, pol: QuantPolicy):
+    ks = jax.random.split(key, 6)
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "q_down": linear_init(ks[0], cfg.d_model, cfg.q_lora_rank, pol),
+        "q_up": linear_init(ks[1], cfg.q_lora_rank, h * qk, pol),
+        "kv_down": linear_init(ks[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, pol),
+        "kv_up": linear_init(ks[3], cfg.kv_lora_rank,
+                             h * (cfg.qk_nope_dim + cfg.v_head_dim), pol),
+        "wo": linear_init(ks[4], h * cfg.v_head_dim, cfg.d_model, pol),
+        "qn": rmsnorm_init(cfg.q_lora_rank),
+        "kvn": rmsnorm_init(cfg.kv_lora_rank),
+    }
+
+
+def _mla_q(p, x, cfg: MLAConfig, pol, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qc = rmsnorm(p["qn"], linear_apply(p["q_down"], x, pol))
+    q = linear_apply(p["q_up"], qc, pol).reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg: MLAConfig, pol, positions):
+    ckv = linear_apply(p["kv_down"], x, pol)
+    c, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = rmsnorm(p["kvn"], c)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, k_rope  # [B,S,rank], [B,S,rope]
+
+
+def mla_apply(p, x, cfg: MLAConfig, pol: QuantPolicy, positions=None):
+    """Training / prefill. Materializes per-head K/V chunk-wise via flash."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope = _mla_q(p, x, cfg, pol, positions)
+    c, k_rope = _mla_ckv(p, x, cfg, pol, positions)
+    kv = linear_apply(p["kv_up"], c, pol).reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim:]
+    k_nope = constrain(k_nope, ("data", None, "model", None))
+    v = constrain(v, ("data", None, "model", None))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))], -1)
+    q = constrain(q, ("data", None, "model", None))
+    o = flash_attention(q, k, v, causal=True)
+    out = linear_apply(p["wo"], o.reshape(b, s, -1), pol)
+    return out, (c, k_rope)
+
+
+def mla_decode(p, x, cache, cur_len, cfg: MLAConfig, pol: QuantPolicy):
+    """Absorbed decode: attention runs in the compressed (rank-512) space —
+    the cache stays [B,S,rank+rope], never expanded per head."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = cur_len[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, pol, positions)  # [B,1,H,*]
+    c_new, kr_new = _mla_ckv(p, x, cfg, pol, positions)
+    cc = _insert_token(cache["c"], c_new, cur_len)
+    krc = _insert_token(cache["kr"], kr_new, cur_len)
+
+    # absorb kv_up's K-half into q  (W_uk: rank -> H*nope)
+    w_uk, w_uv = _kv_up_split(p, cfg, pol)  # [rank,H,nope], [rank,H,vdim]
+    q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))  # [B,1,H,rank]
+    s_c = jnp.einsum("bqhr,bkr->bhqk", q_c, cc.astype(jnp.float32))
+    s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                     krc.astype(jnp.float32))
+    scores = (s_c + s_r) / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    valid = jnp.arange(cc.shape[1])[None, :] < (cur_len + 1)[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bhqk,bkr->bqhr", pattn, cc.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv.astype(jnp.float32))
+    out = linear_apply(p["wo"], o.reshape(b, 1, -1).astype(x.dtype), pol)
+    return out, {"c": cc, "kr": krc}
+
+
+def _kv_up_split(p, cfg: MLAConfig, pol):
+    """Effective (adapter-included) kv_up weight, split into K and V halves."""
+    from .common import merge_linear
+    from repro.core.quant import dequantize
+    from repro.core.nf4 import nf4_dequantize
+    m = merge_linear(p["kv_up"], pol)
+    w = dequantize(m["q"]) if "q" in m else (
+        nf4_dequantize(m["nf4"]) if "nf4" in m else m["w"])
+    h = cfg.n_heads
+    w = w.reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    return w[..., : cfg.qk_nope_dim], w[..., cfg.qk_nope_dim:]
+
+
+def mla_init_cache(batch: int, seq: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {"c": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype)}

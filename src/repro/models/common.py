@@ -1,0 +1,208 @@
+"""Shared building blocks for the model zoo.
+
+No flax — modules are (init_fn, apply_fn) pairs over plain pytrees, which
+keeps them trivially `scan`-able over layers and `eval_shape`-able for
+allocation-free dry-runs.
+
+Every projection matrix goes through :func:`linear_init` /
+:func:`linear_apply`, which dispatch on the framework-wide
+:class:`QuantPolicy`:
+
+  mode="fp"      plain dense weight (pretraining / accuracy reference)
+  mode="lora"    fp base + unconstrained LoRA            (baseline)
+  mode="qlora"   NF4 base + unconstrained LoRA           (baseline)
+  mode="qalora"  INT-N group-wise base + group-pooled adapter  (the paper)
+
+so the paper's technique is a first-class, globally-switchable feature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora as lora_lib
+from repro.core import nf4 as nf4_lib
+from repro.core import qalora as qalora_lib
+from repro.core import quant as quant_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    mode: str = "qalora"  # fp | lora | qlora | qalora
+    bits: int = 4
+    group_size: int = 32
+    rank: int = 16
+    s: float = 2.0
+    use_kernel: bool = False  # route through the Pallas kernels
+    dtype: Any = jnp.float32  # compute/adapter dtype
+    scale_dtype: Any = jnp.float32  # quantization scale/zero storage dtype
+
+FP = QuantPolicy(mode="fp")
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in: int, d_out: int, pol: QuantPolicy,
+                quantize_policy: bool = True):
+    """Init one projection. ``quantize_policy=False`` forces fp (routers,
+    norms-adjacent small matrices that the quantization literature keeps
+    high-precision)."""
+    if pol.mode == "fp" or not quantize_policy:
+        w = jax.random.normal(key, (d_in, d_out), pol.dtype) / jnp.sqrt(d_in).astype(pol.dtype)
+        return {"w": w}
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
+    if pol.mode == "lora":
+        return {"w": w.astype(pol.dtype),
+                "ad": lora_lib.init_lora(k2, d_in, pol.rank, d_out, pol.dtype)}
+    if pol.mode == "qlora":
+        return {"nf4": nf4_lib.nf4_quantize(w),
+                "ad": lora_lib.init_lora(k2, d_in, pol.rank, d_out, pol.dtype)}
+    if pol.mode == "qalora":
+        qt = quant_lib.quantize(w, pol.bits, pol.group_size, scale_dtype=pol.scale_dtype)
+        return {"q": qt,
+                "ad": qalora_lib.init_qalora(k2, qt.n_groups, pol.rank, d_out, pol.dtype)}
+    raise ValueError(pol.mode)
+
+
+def linear_apply(p, x, pol: QuantPolicy):
+    if "w" in p and "ad" not in p:
+        return x @ p["w"].astype(x.dtype)
+    if "w" in p:
+        return lora_lib.lora_forward(x, p["w"].astype(x.dtype), p["ad"], pol.s)
+    if "nf4" in p:
+        if "ad" not in p:  # merged-for-deployment NF4 (never happens: QLoRA
+            return x @ nf4_lib.nf4_dequantize(p["nf4"], x.dtype)  # merges to fp)
+        return lora_lib.qlora_forward(x, p["nf4"], p["ad"], pol.s)
+    # qalora (or a bare quantized linear after merge / PTQ)
+    if "ad" not in p:
+        if pol.use_kernel:
+            from repro.kernels import qmatmul
+            return qmatmul(x, p["q"])
+        return x @ quant_lib.dequantize(p["q"], x.dtype)
+    if pol.use_kernel:
+        from repro.kernels import qalora_matmul  # lazy: kernels optional
+        return qalora_matmul(x, p["q"], p["ad"], s=pol.s)
+    return qalora_lib.qalora_forward(x, p["q"], p["ad"], pol.s, compute_dtype=x.dtype)
+
+
+def merge_linear(p, pol: QuantPolicy):
+    """Merge the adapter for deployment. QA-LoRA stays quantized (exact);
+    QLoRA falls back to fp (the paper's Table-1 '4+16' row)."""
+    if "q" in p:
+        return {"q": qalora_lib.merge(p["q"], p["ad"], pol.s)}
+    if "nf4" in p:
+        return {"w": lora_lib.qlora_merge_fp(p["nf4"], p["ad"], pol.s)}
+    if "ad" in p:
+        return {"w": lora_lib.lora_merge(p["w"], p["ad"], pol.s)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# norms / activations / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding. x: [..., seq, n_heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def constrain_first(x, candidates):
+    """Apply the first candidate spec whose *every* named axis group exists
+    on the mesh and divides its dim — unlike :func:`constrain`, which drops
+    non-dividing axes per-dim, this treats each candidate atomically (used
+    where fallbacks need to re-shard a *different* dim, e.g. MoE dispatch
+    buffers: expert-dim EP if it divides, else token-dim DP)."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    for spec in candidates:
+        spec_t = tuple(spec)
+        if len(spec_t) != x.ndim:
+            continue
+        ok = True
+        for dim, names in enumerate(spec_t):
+            if names is None:
+                continue
+            group = names if isinstance(names, tuple) else (names,)
+            if any(n not in mesh.shape for n in group):
+                ok = False
+                break
+            size = 1
+            for n in group:
+                size *= mesh.shape[n]
+            if x.shape[dim] % size != 0:
+                ok = False
+                break
+        if ok:
+            return constrain(x, spec_t)
+    return x
+
+
+def constrain(x, spec):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    from jax.sharding import PartitionSpec as P
+    from jax.interpreters import pxla
+    env = pxla.thread_resources.env
+    mesh = env.physical_mesh
+    if mesh.empty or spec is None:
+        return x
+    # right-align the spec against x's rank
+    spec = tuple(spec)
+    if len(spec) > x.ndim:
+        spec = spec[-x.ndim:]
+    elif len(spec) < x.ndim:
+        spec = (None,) * (x.ndim - len(spec)) + spec
+    # drop mesh axes that don't exist on this mesh or don't divide the dim
+    axes = []
+    for dim, names in enumerate(spec):
+        if names is None:
+            axes.append(None)
+            continue
+        group = tuple(n for n in (names if isinstance(names, tuple) else (names,))
+                      if n in mesh.shape)
+        size = 1
+        for n in group:
+            size *= mesh.shape[n]
+        ok = group and x.shape[dim] % size == 0
+        axes.append((group if len(group) > 1 else group[0]) if ok else None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*axes)))

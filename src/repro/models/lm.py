@@ -1,0 +1,673 @@
+"""Model assembly: every assigned architecture as a scan-over-layers LM.
+
+Families
+--------
+  gqa          dense decoder (pixtral/gemma3/starcoder2/h2o-danube/deepseek-67b)
+  gqa_moe      Mixtral (GQA + top-k MoE FFN)
+  mla_moe      DeepSeek-V3 (MLA + 256-expert MoE + shared expert + MTP)
+  mamba_hybrid Zamba2 (Mamba2 stack + periodic shared attention block)
+  rwkv         RWKV6 (time-mix + channel-mix)
+  encdec       Seamless-M4T (audio-frontend encoder + causal decoder)
+
+Params are plain pytrees; layer stacks are leading-axis-stacked and applied
+with :func:`cscan` (roofline-countable).  Every projection routes through
+the QuantPolicy (fp / lora / qlora / qalora), so the paper's technique is a
+config switch across all ten architectures.
+
+Batch format: {"tokens": [B,St] int32, "labels": [B,St] int32 (-1 = pad)}
+plus "frontend" [B,F,d] for vlm and "src" [B,Ss,d] for audio enc-dec —
+modality frontends are stubs per the assignment (precomputed embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, constrain
+from .attention import (AttnConfig, MLAConfig, gqa_init, gqa_apply, gqa_decode,
+                        gqa_init_cache, mla_init, mla_apply, mla_decode,
+                        mla_init_cache, cross_init, cross_kv, cross_apply)
+from .mlp import mlp_init, mlp_apply
+from .moe import moe_init, moe_apply
+from .ssm import (Mamba2Config, RWKV6Config, mamba2_init, mamba2_mix,
+                  mamba2_decode, mamba2_init_state, rwkv6_init,
+                  rwkv6_time_mix, rwkv6_channel_mix, rwkv6_decode_time_mix,
+                  rwkv6_init_state)
+from .scan_utils import cscan
+
+
+def _attn_cfg(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                      rope_theta=cfg.rope_theta, window=cfg.window,
+                      qk_norm=cfg.qk_norm)
+
+
+def _mla_cfg(cfg: ArchConfig) -> MLAConfig:
+    return MLAConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                     q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+                     qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+                     v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta)
+
+
+def _mamba_cfg(cfg: ArchConfig) -> Mamba2Config:
+    return Mamba2Config(d_model=cfg.d_model, ssm_state=cfg.ssm_state,
+                        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def _rwkv_cfg(cfg: ArchConfig) -> RWKV6Config:
+    return RWKV6Config(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       head_dim=cfg.ssm_head_dim or 64, chunk=cfg.ssm_chunk)
+
+
+# ---------------------------------------------------------------------------
+# per-family transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def _gqa_block_init(key, cfg: ArchConfig, pol: QuantPolicy, moe: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+         "attn": gqa_init(ks[0], _attn_cfg(cfg), pol)}
+    if moe:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                            cfg.n_experts, pol,
+                            n_shared=cfg.n_shared_experts,
+                            shared_d_ff=cfg.moe_d_ff or cfg.d_ff,
+                            routing=cfg.routing)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)
+    return p
+
+
+def _gqa_block(p, x, cfg: ArchConfig, pol, *, window=None, theta=None,
+               positions=None, moe=False):
+    a, kv = gqa_apply(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                      _attn_cfg(cfg), pol, positions=positions,
+                      window=window, theta=theta,
+                      chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+    x = x + a
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, aux = moe_apply(p["moe"], h, pol, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                           routing=cfg.routing, act=cfg.act,
+                           moe_chunk=cfg.moe_chunk)
+    else:
+        m = mlp_apply(p["mlp"], h, pol, cfg.act)
+    return x + m, kv, aux
+
+
+def _gqa_block_decode(p, x, cache, cur_len, cfg: ArchConfig, pol, *,
+                      window=None, theta=None, moe=False):
+    a, cache = gqa_decode(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cache, cur_len, _attn_cfg(cfg), pol,
+                          window=window, theta=theta)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, _ = moe_apply(p["moe"], h, pol, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         routing=cfg.routing, act=cfg.act, moe_chunk=0)
+    else:
+        m = mlp_apply(p["mlp"], h, pol, cfg.act)
+    return x + m, cache
+
+
+def _mla_block_init(key, cfg: ArchConfig, pol, moe: bool):
+    ks = jax.random.split(key, 2)
+    p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+         "attn": mla_init(ks[0], _mla_cfg(cfg), pol)}
+    if moe:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                            pol, n_shared=cfg.n_shared_experts,
+                            shared_d_ff=cfg.moe_d_ff, routing=cfg.routing)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)
+    return p
+
+
+def _mla_block(p, x, cfg, pol, *, positions=None, moe=False):
+    a, _ = mla_apply(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                     _mla_cfg(cfg), pol, positions=positions)
+    x = x + a
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, aux = moe_apply(p["moe"], h, pol, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                           routing=cfg.routing, act=cfg.act,
+                           moe_chunk=cfg.moe_chunk)
+    else:
+        m = mlp_apply(p["mlp"], h, pol, cfg.act)
+    return x + m, aux
+
+
+def _mla_block_prefill(p, x, cfg, pol, moe=False):
+    """Like _mla_block but returns the compressed cache."""
+    a, ckv = mla_apply(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                       _mla_cfg(cfg), pol)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, _ = moe_apply(p["moe"], h, pol, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         routing=cfg.routing, act=cfg.act,
+                         moe_chunk=cfg.moe_chunk)
+    else:
+        m = mlp_apply(p["mlp"], h, pol, cfg.act)
+    return x + m, ckv
+
+
+def _mla_block_decode(p, x, cache, cur_len, cfg, pol, moe=False):
+    a, cache = mla_decode(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cache, cur_len, _mla_cfg(cfg), pol)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, _ = moe_apply(p["moe"], h, pol, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         routing=cfg.routing, act=cfg.act, moe_chunk=0)
+    else:
+        m = mlp_apply(p["mlp"], h, pol, cfg.act)
+    return x + m, cache
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+
+def _sp(x, cfg=None):
+    """Sequence-parallel residual constraint between layers (PERF: without
+    it the rematted per-layer residual stack is replicated over the model
+    axis — 95 x 1.07GB/device on deepseek-67b train_4k; with SP it shards
+    seq over "model" for a 16x cut.  Gated per-arch: it pessimizes
+    chunked-recurrence mixers.  See EXPERIMENTS.md §Perf)."""
+    if cfg is not None and not cfg.seq_parallel:
+        return x
+    return constrain(x, (("pod", "data"), "model", None))
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+
+    # ---------------- init ----------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, pol = self.cfg, self.cfg.quant
+        ks = jax.random.split(key, 8)
+        d = cfg.d_model
+        params: Dict[str, Any] = {
+            "embed": jax.random.normal(ks[0], (cfg.vocab, d), pol.dtype) * 0.02,
+            "final_ln": rmsnorm_init(d),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = jax.random.normal(ks[1], (d, cfg.vocab), pol.dtype) * 0.02
+
+        fam = cfg.family
+        if fam in ("gqa", "gqa_moe"):
+            moe = fam == "gqa_moe"
+            params["blocks"] = jax.vmap(
+                lambda k: _gqa_block_init(k, cfg, pol, moe))(
+                    jax.random.split(ks[2], cfg.n_layers))
+        elif fam == "mla_moe":
+            nd = cfg.n_dense_layers
+            params["dense_blocks"] = jax.vmap(
+                lambda k: _mla_block_init(k, cfg, pol, False))(
+                    jax.random.split(ks[2], nd))
+            params["moe_blocks"] = jax.vmap(
+                lambda k: _mla_block_init(k, cfg, pol, True))(
+                    jax.random.split(ks[3], cfg.n_layers - nd))
+            if cfg.mtp:
+                params["mtp_proj"] = linear_init(ks[4], 2 * d, d, pol,
+                                                 quantize_policy=False)
+                params["mtp_block"] = _mla_block_init(ks[5], cfg, pol, False)
+                params["mtp_ln"] = rmsnorm_init(d)
+        elif fam == "mamba_hybrid":
+            n_groups, per, tail = self._hybrid_layout()
+            mcfg = _mamba_cfg(cfg)
+            params["mamba_groups"] = jax.vmap(jax.vmap(
+                lambda k: mamba2_init(k, mcfg, pol)))(
+                    jax.random.split(ks[2], n_groups * per).reshape(n_groups, per, 2))
+            params["mamba_tail"] = jax.vmap(
+                lambda k: mamba2_init(k, mcfg, pol))(jax.random.split(ks[3], tail))
+            params["shared_attn"] = _gqa_block_init(ks[4], cfg, pol, False)
+        elif fam == "rwkv":
+            rcfg = _rwkv_cfg(cfg)
+            def blk(k):
+                k1, k2 = jax.random.split(k)
+                return {"ln1": rmsnorm_init(d), "ln2": rmsnorm_init(d),
+                        "mix": rwkv6_init(k1, rcfg, pol)}
+            params["blocks"] = jax.vmap(blk)(jax.random.split(ks[2], cfg.n_layers))
+        elif fam == "encdec":
+            params["enc_blocks"] = jax.vmap(
+                lambda k: self._enc_block_init(k))(
+                    jax.random.split(ks[2], cfg.n_enc_layers))
+            params["dec_blocks"] = jax.vmap(
+                lambda k: self._dec_block_init(k))(
+                    jax.random.split(ks[3], cfg.n_layers))
+            params["enc_ln"] = rmsnorm_init(d)
+        else:
+            raise ValueError(fam)
+        return params
+
+    def _hybrid_layout(self):
+        cfg = self.cfg
+        per = cfg.attn_every - 1          # mamba blocks per group
+        n_groups = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_groups * cfg.attn_every
+        return n_groups, per, tail
+
+    def _enc_block_init(self, key):
+        cfg, pol = self.cfg, self.cfg.quant
+        ks = jax.random.split(key, 2)
+        return {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+                "attn": gqa_init(ks[0], _attn_cfg(cfg), pol),
+                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)}
+
+    def _dec_block_init(self, key):
+        cfg, pol = self.cfg, self.cfg.quant
+        ks = jax.random.split(key, 3)
+        return {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+                "ln3": rmsnorm_init(cfg.d_model),
+                "attn": gqa_init(ks[0], _attn_cfg(cfg), pol),
+                "cross": cross_init(ks[1], _attn_cfg(cfg), pol),
+                "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)}
+
+    # ---------------- shared pieces ----------------
+
+    def _layer_extras(self):
+        """Per-layer scanned (window, rope_theta) arrays (gemma3 interleave)."""
+        cfg = self.cfg
+        L = cfg.n_layers
+        if cfg.global_every:
+            is_global = (jnp.arange(L) % cfg.global_every) == (cfg.global_every - 1)
+            window = jnp.where(is_global, 0, cfg.window or 0)
+            theta = jnp.where(is_global, cfg.global_rope_theta, cfg.rope_theta)
+            return window.astype(jnp.int32), theta.astype(jnp.float32)
+        w = cfg.window if cfg.window else 0
+        return (jnp.full((L,), w, jnp.int32),
+                jnp.full((L,), cfg.rope_theta, jnp.float32))
+
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]  # gather; vocab sharded on model
+        return constrain(x, (("pod", "data"), None, None))
+
+    def _head_w(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["head"]["w"] if isinstance(params.get("head"), dict)
+                else params["head"])
+
+    def _logits(self, params, h):
+        return (h @ self._head_w(params).astype(h.dtype)).astype(jnp.float32)
+
+    def _xent(self, params, h, labels):
+        """Chunked softmax cross-entropy (never materializes [B,S,V])."""
+        cfg = self.cfg
+        b, s, d = h.shape
+        c = min(cfg.xent_chunk, s)
+        assert s % c == 0
+        nc = s // c
+        hs = h.reshape(b, nc, c, d).swapaxes(0, 1)
+        ys = labels.reshape(b, nc, c).swapaxes(0, 1)
+        w = self._head_w(params)
+
+        def body(carry, xs):
+            hc, yc = xs
+            logits = (hc @ w.astype(hc.dtype)).astype(jnp.float32)
+            logits = constrain(logits, (("pod", "data"), None, "model"))
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, yc.clip(0)[..., None], axis=-1)[..., 0]
+            mask = (yc >= 0).astype(jnp.float32)
+            loss_sum, n = carry
+            return (loss_sum + (((lse - ll) * mask).sum()),
+                    n + mask.sum()), None
+
+        (loss_sum, n), _ = cscan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hs, ys), name="xent_chunk")
+        return loss_sum / jnp.maximum(n, 1.0)
+
+    def _inputs_to_x(self, params, batch):
+        """Token embeds, with vlm patch embeds prepended (frontend stub)."""
+        x = self._embed(params, batch["tokens"])
+        if self.cfg.frontend == "vision" and "frontend" in batch:
+            x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+        return x
+
+    # ---------------- forward (train/prefill trunk) ----------------
+
+    def _trunk(self, params, x, collect_cache: bool = False):
+        """Runs the layer stack. Returns (h, aux, caches or None)."""
+        cfg, pol = self.cfg, self.cfg.quant
+        fam = cfg.family
+        x = constrain(x, (("pod", "data"), None, None))
+
+        if fam in ("gqa", "gqa_moe"):
+            moe = fam == "gqa_moe"
+            window, theta = self._layer_extras()
+
+            def body(carry, xs):
+                xc, aux = carry
+                blk, w_, t_ = xs
+                fn = _maybe_remat(
+                    lambda b_, x_: _gqa_block(b_, x_, cfg, pol, window=w_,
+                                              theta=t_, moe=moe), cfg)
+                y, kv, a = fn(blk, xc)
+                out = kv if collect_cache else None
+                return (_sp(y, cfg), aux + a), out
+
+            (x, aux), caches = cscan(body, (x, jnp.float32(0.0)),
+                                     (params["blocks"], window, theta),
+                                     name="layers")
+            cache = None
+            if collect_cache:
+                cache = {"k": caches[0], "v": caches[1]}
+            return x, aux, cache
+
+        if fam == "mla_moe":
+            aux = jnp.float32(0.0)
+            caches = []
+            for name, moe in (("dense_blocks", False), ("moe_blocks", True)):
+                if collect_cache:
+                    def body(xc, blk):
+                        y, ckv = _maybe_remat(
+                            lambda b_, x_: _mla_block_prefill(b_, x_, cfg, pol, moe),
+                            cfg)(blk, xc)
+                        return _sp(y, cfg), ckv
+                    x, ckv = cscan(body, x, params[name], name=name)
+                    caches.append(ckv)
+                else:
+                    def body(carry, blk):
+                        xc, a = carry
+                        y, a2 = _maybe_remat(
+                            lambda b_, x_: _mla_block(b_, x_, cfg, pol, moe=moe),
+                            cfg)(blk, xc)
+                        return (_sp(y, cfg), a + a2), None
+                    (x, aux), _ = cscan(body, (x, aux), params[name], name=name)
+            cache = None
+            if collect_cache:
+                cache = {"dense": {"c": caches[0][0], "kr": caches[0][1]},
+                         "moe": {"c": caches[1][0], "kr": caches[1][1]}}
+            return x, aux, cache
+
+        if fam == "mamba_hybrid":
+            mcfg = _mamba_cfg(cfg)
+            shared = params["shared_attn"]
+
+            def mamba_body(xc, blk):
+                def fn(b_, x_):
+                    y, st = mamba2_mix(b_, x_, mcfg, pol, return_state=True)
+                    return x_ + y, st
+                y, st = _maybe_remat(fn, cfg)(blk, xc)
+                return _sp(y, cfg), st if collect_cache else None
+
+            def group_body(xc, gblk):
+                xc, sts = cscan(mamba_body, xc, gblk, name="mamba_inner")
+                y, kv, _ = _maybe_remat(
+                    lambda b_, x_: _gqa_block(b_, x_, cfg, pol), cfg)(shared, xc)
+                return _sp(y, cfg), (sts, kv) if collect_cache else None
+
+            x, gout = cscan(group_body, x, params["mamba_groups"], name="groups")
+            x, tsts = cscan(mamba_body, x, params["mamba_tail"], name="mamba_tail")
+            cache = None
+            if collect_cache:
+                sts, kvs = gout
+                cache = {"groups": sts, "tail": tsts,
+                         "k": kvs[0], "v": kvs[1]}
+            return x, jnp.float32(0.0), cache
+
+        if fam == "rwkv":
+            rcfg = _rwkv_cfg(cfg)
+
+            def body(xc, blk):
+                def fn(b_, x_):
+                    y, (tp, wkv) = rwkv6_time_mix(
+                        b_["mix"], rmsnorm(b_["ln1"], x_), rcfg, pol)
+                    x_ = x_ + y
+                    y, cp = rwkv6_channel_mix(
+                        b_["mix"], rmsnorm(b_["ln2"], x_), rcfg, pol)
+                    return x_ + y, {"tm_prev": tp, "wkv": wkv, "cm_prev": cp}
+                y, st = _maybe_remat(fn, cfg)(blk, xc)
+                return _sp(y, cfg), st if collect_cache else None
+
+            x, sts = cscan(body, x, params["blocks"], name="layers")
+            return x, jnp.float32(0.0), sts if collect_cache else None
+
+        raise ValueError(fam)
+
+    # ---------------- encoder (enc-dec) ----------------
+
+    def _encode(self, params, src):
+        cfg, pol = self.cfg, self.cfg.quant
+        x = constrain(src, (("pod", "data"), None, None))
+
+        def body(xc, blk):
+            def fn(b_, x_):
+                a, _ = gqa_apply(b_["attn"], rmsnorm(b_["ln1"], x_), _attn_cfg(cfg),
+                                 pol, causal=False,
+                                 chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+                x_ = x_ + a
+                return x_ + mlp_apply(b_["mlp"], rmsnorm(b_["ln2"], x_), pol, cfg.act)
+            return _maybe_remat(fn, cfg)(blk, xc), None
+
+        x, _ = cscan(body, x, params["enc_blocks"], name="enc_layers")
+        return rmsnorm(params["enc_ln"], x)
+
+    def _decode_trunk(self, params, x, memory, collect_cache=False):
+        cfg, pol = self.cfg, self.cfg.quant
+
+        def body(xc, blk):
+            def fn(b_, x_):
+                a, kv = gqa_apply(b_["attn"], rmsnorm(b_["ln1"], x_),
+                                  _attn_cfg(cfg), pol,
+                                  chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+                x_ = x_ + a
+                km, vm = cross_kv(b_["cross"], memory, _attn_cfg(cfg), pol)
+                x_ = x_ + cross_apply(b_["cross"], rmsnorm(b_["ln2"], x_), km, vm,
+                                      _attn_cfg(cfg), pol,
+                                      chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
+                x_ = x_ + mlp_apply(b_["mlp"], rmsnorm(b_["ln3"], x_), pol, cfg.act)
+                return x_, (kv, (km, vm))
+            fn = _maybe_remat(fn, cfg) if not collect_cache else fn
+            y, caches = fn(blk, xc)
+            return _sp(y, cfg), caches if collect_cache else None
+
+        x, caches = cscan(body, x, params["dec_blocks"], name="dec_layers")
+        return x, caches
+
+    # ---------------- public API ----------------
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["src"])
+            x = self._embed(params, batch["tokens"])
+            h, _ = self._decode_trunk(params, x, memory)
+            aux = jnp.float32(0.0)
+        else:
+            x = self._inputs_to_x(params, batch)
+            h, aux, _ = self._trunk(params, x)
+        h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+        labels = batch["labels"]
+        if cfg.frontend == "vision" and "frontend" in batch:
+            f = batch["frontend"].shape[1]
+            labels = jnp.concatenate(
+                [jnp.full((labels.shape[0], f), -1, labels.dtype), labels], axis=1)
+        loss = self._xent(params, h, labels)
+        metrics = {"xent": loss, "aux": aux}
+        if cfg.family == "mla_moe" and cfg.mtp and "mtp_block" in params:
+            loss = loss + 0.3 * self._mtp_loss(params, h, batch, labels)
+        loss = loss + cfg.aux_coef * aux
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, batch, labels):
+        """DeepSeek-V3 multi-token prediction: one extra depth predicting t+2."""
+        cfg, pol = self.cfg, self.cfg.quant
+        emb_next = self._inputs_to_x(params, batch)
+        cat = jnp.concatenate([rmsnorm(params["mtp_ln"], h),
+                               jnp.roll(emb_next, -1, axis=1)], axis=-1)
+        x = linear_apply(params["mtp_proj"], cat, pol)
+        x, _ = _mla_block(params["mtp_block"], x, cfg, pol, moe=False)
+        labels2 = jnp.roll(labels, -1, axis=1).at[:, -1].set(-1)
+        return self._xent(params, x, labels2)
+
+    def prefill(self, params, batch):
+        """Returns (last-token logits [B, V], cache dict)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            memory = self._encode(params, batch["src"])
+            x = self._embed(params, batch["tokens"])
+            h, caches = self._decode_trunk(params, x, memory, collect_cache=True)
+            cache = {"self": {"k": caches[0][0], "v": caches[0][1]},
+                     "cross": {"k": caches[1][0], "v": caches[1][1]}}
+        else:
+            x = self._inputs_to_x(params, batch)
+            h, _, cache = self._trunk(params, x, collect_cache=True)
+        h = rmsnorm(params["final_ln"], h[:, -1:], cfg.norm_eps)
+        logits = self._logits(params, h)[:, 0]
+        seq = (batch["tokens"].shape[1]
+               + (batch.get("frontend").shape[1]
+                  if cfg.frontend == "vision" and "frontend" in batch else 0))
+        length = jnp.full((h.shape[0],), seq, jnp.int32)
+        return logits, {"layers": cache, "len": length}
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        fam = cfg.family
+        kv = lambda n, s: {"k": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                           "v": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)}
+        if fam in ("gqa", "gqa_moe"):
+            layers = kv(L, seq)
+        elif fam == "mla_moe":
+            nd = cfg.n_dense_layers
+            mk = lambda n: {"c": jnp.zeros((n, batch, seq, cfg.kv_lora_rank), dtype),
+                            "kr": jnp.zeros((n, batch, seq, cfg.qk_rope_dim), dtype)}
+            layers = {"dense": mk(nd), "moe": mk(L - nd)}
+        elif fam == "mamba_hybrid":
+            ng, per, tail = self._hybrid_layout()
+            mcfg = _mamba_cfg(cfg)
+            st = lambda: mamba2_init_state(batch, mcfg)
+            layers = {
+                "groups": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (ng, per) + a.shape), st()),
+                "tail": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (tail,) + a.shape), st()),
+                **kv(ng, seq),
+            }
+        elif fam == "rwkv":
+            rcfg = _rwkv_cfg(cfg)
+            st = rwkv6_init_state(batch, rcfg, dtype=self.cfg.quant.dtype)
+            layers = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), st)
+        elif fam == "encdec":
+            src = int(seq * cfg.source_frac)
+            tgt = seq - src
+            layers = {"self": kv(L, tgt), "cross": kv(L, src)}
+        else:
+            raise ValueError(fam)
+        return {"layers": layers, "len": jnp.zeros((batch,), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: [B,1] -> (logits [B,V], updated cache). One serve step."""
+        cfg, pol = self.cfg, self.cfg.quant
+        fam = cfg.family
+        cur = cache["len"]
+        x = self._embed(params, tokens)
+        layers = cache["layers"]
+
+        if fam in ("gqa", "gqa_moe"):
+            moe = fam == "gqa_moe"
+            window, theta = self._layer_extras()
+
+            def body(xc, xs):
+                blk, kvc, w_, t_ = xs
+                y, kvc = _gqa_block_decode(blk, xc, kvc, cur, cfg, pol,
+                                           window=w_, theta=t_, moe=moe)
+                return y, kvc
+
+            x, layers = cscan(body, x, (params["blocks"], layers, window, theta),
+                              name="layers")
+        elif fam == "mla_moe":
+            def mk_body(moe):
+                def body(xc, xs):
+                    blk, cc = xs
+                    y, cc = _mla_block_decode(blk, xc, cc, cur, cfg, pol, moe=moe)
+                    return y, cc
+                return body
+            x, dc = cscan(mk_body(False), x,
+                          (params["dense_blocks"], layers["dense"]), name="dense_blocks")
+            x, mc = cscan(mk_body(True), x,
+                          (params["moe_blocks"], layers["moe"]), name="moe_blocks")
+            layers = {"dense": dc, "moe": mc}
+        elif fam == "mamba_hybrid":
+            mcfg = _mamba_cfg(cfg)
+            shared = params["shared_attn"]
+
+            def mamba_body(xc, xs):
+                blk, st = xs
+                y, st = mamba2_decode(blk, xc, st, mcfg, pol)
+                return xc + y, st
+
+            def group_body(xc, xs):
+                gblk, gst, kvc = xs
+                xc, gst = cscan(mamba_body, xc, (gblk, gst), name="mamba_inner")
+                y, kvc = _gqa_block_decode(shared, xc, kvc, cur, cfg, pol)
+                return y, (gst, kvc)
+
+            x, (gstates, kvs) = cscan(
+                group_body, x,
+                (params["mamba_groups"], layers["groups"],
+                 {"k": layers["k"], "v": layers["v"]}), name="groups")
+            x, tstates = cscan(mamba_body, x,
+                               (params["mamba_tail"], layers["tail"]),
+                               name="mamba_tail")
+            layers = {"groups": gstates, "tail": tstates,
+                      "k": kvs["k"], "v": kvs["v"]}
+        elif fam == "rwkv":
+            rcfg = _rwkv_cfg(cfg)
+
+            def body(xc, xs):
+                blk, st = xs
+                y, (tp, wkv) = rwkv6_decode_time_mix(
+                    blk["mix"], rmsnorm(blk["ln1"], xc),
+                    (st["tm_prev"], st["wkv"]), rcfg, pol)
+                xc = xc + y
+                y, cp = rwkv6_channel_mix(blk["mix"], rmsnorm(blk["ln2"], xc),
+                                          rcfg, pol, prev=st["cm_prev"])
+                return xc + y, {"tm_prev": tp, "wkv": wkv, "cm_prev": cp}
+
+            x, layers = cscan(body, x, (params["blocks"], layers), name="layers")
+        elif fam == "encdec":
+            def body(xc, xs):
+                blk, selfc, crossc = xs
+                a, selfc = gqa_decode(blk["attn"], rmsnorm(blk["ln1"], xc),
+                                      selfc, cur, _attn_cfg(cfg), pol)
+                xc = xc + a
+                xc = xc + cross_apply(blk["cross"], rmsnorm(blk["ln2"], xc),
+                                      crossc["k"], crossc["v"], _attn_cfg(cfg), pol)
+                xc = xc + mlp_apply(blk["mlp"], rmsnorm(blk["ln3"], xc), pol, cfg.act)
+                return xc, selfc
+            x, selfc = cscan(body, x, (params["dec_blocks"], layers["self"],
+                                       layers["cross"]), name="dec_layers")
+            layers = {"self": selfc, "cross": layers["cross"]}
+        else:
+            raise ValueError(fam)
+
+        h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        logits = self._logits(params, h)[:, 0]
+        return logits, {"layers": layers, "len": cur + 1}

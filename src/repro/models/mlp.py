@@ -1,0 +1,29 @@
+"""Gated MLP (SwiGLU / GeGLU) — the d_ff hot-spot every arch shares."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import QuantPolicy, linear_init, linear_apply, act_fn, constrain
+
+
+def mlp_init(key, d_model: int, d_ff: int, pol: QuantPolicy, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": linear_init(ks[1], d_model, d_ff, pol),
+        "down": linear_init(ks[2], d_ff, d_model, pol),
+    }
+    if gated:
+        p["gate"] = linear_init(ks[0], d_model, d_ff, pol)
+    return p
+
+
+def mlp_apply(p, x, pol: QuantPolicy, act: str = "silu"):
+    u = linear_apply(p["up"], x, pol)
+    if "gate" in p:
+        h = act_fn(act)(linear_apply(p["gate"], x, pol)) * u
+    else:
+        h = act_fn(act)(u)
+    h = constrain(h, ("data", None, "model"))
+    return linear_apply(p["down"], h, pol)

@@ -1,0 +1,60 @@
+"""Counted scans: lax.scan/map wrappers that can record their bodies.
+
+XLA's ``cost_analysis()`` counts a while-loop body exactly once (verified
+empirically — see EXPERIMENTS.md §Roofline methodology), so any graph using
+scan-over-layers or chunked attention under-reports FLOPs/bytes.  Every
+scan in the model zoo goes through :func:`cscan` / :func:`cmap`; under
+:func:`recording` (an abstract eval_shape pass) each call appends
+``(name, body, abstract_args, trip_count)`` to the active record, letting
+the roofline module lower each body standalone and reconstruct
+
+    cost(fn) = cost_analysis(fn) + sum_scans (trip-1) * cost(body)
+
+recursively (bodies record their own nested scans when they are traced).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_REC = contextvars.ContextVar("repro_scan_record", default=None)
+
+
+def _sds(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), tree)
+
+
+@contextlib.contextmanager
+def recording(record: list):
+    tok = _REC.set(record)
+    try:
+        yield record
+    finally:
+        _REC.reset(tok)
+
+
+def cscan(body: Callable, init, xs, length: Optional[int] = None, name: str = "scan"):
+    rec = _REC.get()
+    if rec is not None:
+        if xs is not None:
+            first = jax.tree.map(lambda a: a[0], xs)
+            n = jax.tree.leaves(xs)[0].shape[0]
+        else:
+            first, n = None, length
+        rec.append((name, body, (_sds(init), _sds(first)), n))
+    return jax.lax.scan(body, init, xs, length=length)
+
+
+def cmap(f: Callable, xs, name: str = "map"):
+    rec = _REC.get()
+    if rec is not None:
+        first = jax.tree.map(lambda a: a[0], xs)
+        n = jax.tree.leaves(xs)[0].shape[0]
+        body = lambda carry, x: (carry, f(x))
+        rec.append((name, body, ((), _sds(first)), n))
+    return jax.lax.map(f, xs)

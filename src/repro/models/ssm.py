@@ -1,0 +1,339 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented in their *chunked matmul form* (not a per-token scan):
+intra-chunk contributions are causal [Q,Q] matmuls on the MXU, inter-chunk
+state flows through a cscan over chunks.  This is the TPU-idiomatic
+adaptation (DESIGN.md §2) — per-token recurrences starve the MXU — and it
+keeps roofline accounting exact via the scan-body registry.
+
+Correctness of the chunked forms is asserted against naive per-token
+recurrences in tests/test_ssm.py.
+
+The big projections (in/out, r/k/v/g/o) are quantized + QA-LoRA-adapted;
+the recurrence parameters (conv, dt, A, D, decay LoRAs) have no large
+weight matrix and stay fp (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, constrain
+from .scan_utils import cscan
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    ssm_state: int = 64          # N
+    head_dim: int = 64           # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_state
+
+
+def mamba2_init(key, cfg: Mamba2Config, pol: QuantPolicy):
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.n_heads  # z,x,B,C,dt
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, d_in_proj, pol),
+        "out_proj": linear_init(ks[1], cfg.d_inner, cfg.d_model, pol),
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, cfg.conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)),  # A = -exp(a_log)
+        "d_skip": jnp.ones((cfg.n_heads,), jnp.float32),
+        "norm": rmsnorm_init(cfg.d_inner),
+    }
+
+
+def _split_in_proj(h, cfg: Mamba2Config):
+    di, n = cfg.d_inner, cfg.ssm_state
+    z = h[..., :di]
+    xbc = h[..., di : di + cfg.conv_dim]
+    dt = h[..., di + cfg.conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, xbc: [B,S,C], w: [W,C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunk(h0, xs, cfg: Mamba2Config):
+    """One SSD chunk. h0: [B,H,P,N]; xs = (u,bmat,cmat,loga) with
+    u: [B,Q,H,P], bmat/cmat: [B,Q,N], loga: [B,Q,H]."""
+    u, bmat, cmat, loga = xs
+    l = jnp.cumsum(loga, axis=1)  # [B,Q,H] inclusive
+    # intra-chunk: G[b,h,i,j] = (C_i . B_j) exp(l_i - l_j) [i >= j]
+    cb = jnp.einsum("bin,bjn->bij", cmat, bmat)  # [B,Q,Q]
+    ldiff = l[:, :, None, :] - l[:, None, :, :]  # [B,Q,Q,H] (i,j)
+    q = loga.shape[1]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask the exponent BEFORE exp: the i<j entries are positive and
+    # overflow to inf, and `where(mask, exp(inf), 0)` back-propagates NaN
+    ldiff = jnp.where(causal[None, :, :, None], ldiff, -1e30)
+    g = jnp.exp(ldiff) * cb[..., None]
+    y = jnp.einsum("bijh,bjhp->bihp", g, u)
+    # inter-chunk: C_i . (exp(l_i) h0)
+    y = y + jnp.einsum("bin,bhpn,bih->bihp", cmat, h0, jnp.exp(l))
+    # state update
+    decay = jnp.exp(l[:, -1:, :] - l)  # [B,Q,H]  (= prod_{j<t<=Q} a)
+    h_new = h0 * jnp.exp(l[:, -1])[:, :, None, None] + jnp.einsum(
+        "bjhp,bjn,bjh->bhpn", u, bmat, decay)
+    return h_new, y
+
+
+def mamba2_mix(p, x, cfg: Mamba2Config, pol: QuantPolicy, return_state=False):
+    """Training/prefill path. x: [B,S,d] -> [B,S,d] (+ final decode state)."""
+    b, s, _ = x.shape
+    h = linear_apply(p["in_proj"], x, pol)
+    z, xbc, dt_raw = _split_in_proj(h, cfg)
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., : cfg.d_inner]
+    bmat = xbc[..., cfg.d_inner : cfg.d_inner + cfg.ssm_state]
+    cmat = xbc[..., cfg.d_inner + cfg.ssm_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H]
+    loga = dt * a[None, None, :]  # log decay, <= 0
+    xh = xin.reshape(b, s, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
+    u = xh * dt[..., None]
+
+    qch = min(cfg.chunk, s)
+    assert s % qch == 0
+    nc = s // qch
+    def chunked(t):  # [B,S,...] -> [nc, B, Q, ...]
+        return t.reshape(b, nc, qch, *t.shape[2:]).swapaxes(0, 1)
+    xs = (chunked(u), chunked(bmat.astype(jnp.float32)),
+          chunked(cmat.astype(jnp.float32)), chunked(loga))
+    h0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.ssm_state), jnp.float32)
+
+    def chunk_body(c, xs_):
+        c, y_ = _ssd_chunk(c, xs_, cfg)
+        # PERF: stack chunk outputs in the activation dtype — the f32
+        # stacked ys buffer dominated zamba2 train temps (EXPERIMENTS §Perf)
+        return c, y_.astype(x.dtype)
+
+    hN, ys = cscan(chunk_body, h0, xs, name="ssd_chunk")
+    y = ys.swapaxes(0, 1).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    y = y.astype(jnp.float32) + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = linear_apply(p["out_proj"], y, pol)
+    if return_state:
+        state = {"conv": xbc_raw[:, -(cfg.conv_width - 1):, :].astype(jnp.float32),
+                 "ssm": hN}
+        return out, state
+    return out
+
+
+def mamba2_init_state(batch: int, cfg: Mamba2Config, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p, x, state, cfg: Mamba2Config, pol: QuantPolicy):
+    """Single-token step. x: [B,1,d]."""
+    b = x.shape[0]
+    h = linear_apply(p["in_proj"], x, pol)[:, 0]
+    z, xbc, dt_raw = _split_in_proj(h, cfg)
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # [B,W,C]
+    conv = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"]) + p["conv_b"])
+    xin = conv[..., : cfg.d_inner]
+    bvec = conv[..., cfg.d_inner : cfg.d_inner + cfg.ssm_state]
+    cvec = conv[..., cfg.d_inner + cfg.ssm_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dt * (-jnp.exp(p["a_log"]))[None, :])  # [B,H]
+    xh = xin.reshape(b, cfg.n_heads, cfg.head_dim)
+    u = xh * dt[..., None]
+    ssm = state["ssm"] * a[..., None, None] + jnp.einsum("bhp,bn->bhpn", u, bvec)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cvec) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = linear_apply(p["out_proj"], y[:, None, :], pol)
+    return out, {"conv": window[:, 1:], "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_init(key, cfg: RWKV6Config, pol: QuantPolicy):
+    ks = jax.random.split(key, 12)
+    d = cfg.d_model
+    p = {
+        # time mix
+        "wr": linear_init(ks[0], d, d, pol),
+        "wk": linear_init(ks[1], d, d, pol),
+        "wv": linear_init(ks[2], d, d, pol),
+        "wg": linear_init(ks[3], d, d, pol),
+        "wo": linear_init(ks[4], d, d, pol),
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,g,w shift-mix
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w1": jax.random.normal(ks[5], (d, cfg.decay_lora), jnp.float32) * 0.02,
+        "w2": jax.random.normal(ks[6], (cfg.decay_lora, d), jnp.float32) * 0.02,
+        "u": jax.random.normal(ks[7], (cfg.n_heads, cfg.head_dim), jnp.float32) * 0.1,
+        "ln_x": rmsnorm_init(d),
+        # channel mix
+        "ck": linear_init(ks[8], d, cfg.d_ff, pol),
+        "cv": linear_init(ks[9], cfg.d_ff, d, pol),
+        "cr": linear_init(ks[10], d, d, pol),
+        "cmu": 0.5 * jnp.ones((2, d), jnp.float32),
+    }
+    return p
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros / `prev` for t = 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_chunk(s0, xs, cfg: RWKV6Config, u):
+    """One WKV chunk. s0: [B,H,K,V]; xs = (r,k,v,logw): [B,Q,H,K/V]."""
+    r, k, v, logw = xs
+    lw = jnp.cumsum(logw, axis=1)  # [B,Q,H,K] inclusive
+    # exclusive cumulative decay before position t:
+    lw_ex = lw - logw
+    # clamp the factored exponentials: exp(-lw) explodes once the chunk's
+    # cumulative decay passes ~e^-30 (those contributions are 0 anyway)
+    lw_safe = jnp.maximum(lw, -30.0)
+    r_t = r * jnp.exp(jnp.maximum(lw_ex, -30.0))
+    k_t = k * jnp.exp(-lw_safe)
+    att = jnp.einsum("bihk,bjhk->bhij", r_t, k_t)  # strict-causal i>j
+    q = r.shape[1]
+    strict = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    att = jnp.where(strict[None, None], att, 0.0)
+    y = jnp.einsum("bhij,bjhv->bihv", att, v)
+    # diagonal (current token) via bonus u
+    y = y + jnp.einsum("bihk,hk,bihk,bihv->bihv", r, u, k, v)
+    # inter-chunk from carried state
+    y = y + jnp.einsum("bihk,bhkv->bihv", r_t, s0)
+    # state update: S' = diag(prod w) S + sum_j diag(prod_{t>j} w) k_j v_j
+    total = lw[:, -1]  # [B,H,K]
+    decay_after = jnp.exp(total[:, None] - lw)  # [B,Q,H,K]
+    s_new = s0 * jnp.exp(total)[..., None] + jnp.einsum(
+        "bjhk,bjhv->bhkv", k * decay_after, v)
+    return s_new, y
+
+
+def rwkv6_time_mix(p, x, cfg: RWKV6Config, pol: QuantPolicy, prev=None, state=None):
+    """x: [B,S,d]; returns (y, (last_x, new_state))."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xp = _shift(x, prev)
+    mix = lambda i: x + p["mu"][i][None, None, :].astype(x.dtype) * (xp - x)
+    r = linear_apply(p["wr"], mix(0), pol).reshape(b, s, h, hd).astype(jnp.float32)
+    k = linear_apply(p["wk"], mix(1), pol).reshape(b, s, h, hd).astype(jnp.float32)
+    v = linear_apply(p["wv"], mix(2), pol).reshape(b, s, h, hd).astype(jnp.float32)
+    g = linear_apply(p["wg"], mix(3), pol)
+    # data-dependent decay (the Finch hallmark)
+    wx = mix(4).astype(jnp.float32)
+    dec = p["w0"] + jnp.tanh(wx @ p["w1"]) @ p["w2"]  # [B,S,d]
+    logw = -jnp.exp(dec).reshape(b, s, h, hd)  # log w_t < 0
+
+    qch = min(cfg.chunk, s)
+    assert s % qch == 0
+    nc = s // qch
+    def chunked(t):
+        return t.reshape(b, nc, qch, h, hd).swapaxes(0, 1)
+    s0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def chunk_body(c, xs_):
+        c, y_ = _wkv_chunk(c, xs_, cfg, p["u"])
+        return c, y_.astype(x.dtype)  # PERF: bf16 chunk-output stack
+
+    sN, ys = cscan(chunk_body, s0,
+                   (chunked(r), chunked(k), chunked(v), chunked(logw)),
+                   name="wkv_chunk")
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    y = rmsnorm(p["ln_x"], y) * jax.nn.silu(g)
+    return linear_apply(p["wo"], y, pol), (x[:, -1:], sN)
+
+
+def rwkv6_channel_mix(p, x, cfg: RWKV6Config, pol: QuantPolicy, prev=None):
+    xp = _shift(x, prev)
+    mixk = x + p["cmu"][0][None, None, :].astype(x.dtype) * (xp - x)
+    mixr = x + p["cmu"][1][None, None, :].astype(x.dtype) * (xp - x)
+    k = jnp.square(jax.nn.relu(linear_apply(p["ck"], mixk, pol)))
+    k = constrain(k, ("data", None, "model"))
+    v = linear_apply(p["cv"], k, pol)
+    return jax.nn.sigmoid(linear_apply(p["cr"], mixr, pol)) * v, x[:, -1:]
+
+
+def rwkv6_decode_time_mix(p, x, state, cfg: RWKV6Config, pol: QuantPolicy):
+    """Single token: x [B,1,d]; state = (prev_x [B,1,d], S [B,H,K,V])."""
+    prev, s0 = state
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    mix = lambda i: x + p["mu"][i][None, None, :].astype(x.dtype) * (prev - x)
+    r = linear_apply(p["wr"], mix(0), pol).reshape(b, h, hd).astype(jnp.float32)
+    k = linear_apply(p["wk"], mix(1), pol).reshape(b, h, hd).astype(jnp.float32)
+    v = linear_apply(p["wv"], mix(2), pol).reshape(b, h, hd).astype(jnp.float32)
+    g = linear_apply(p["wg"], mix(3), pol)
+    wx = mix(4).astype(jnp.float32)
+    dec = p["w0"] + jnp.tanh(wx @ p["w1"]) @ p["w2"]
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, h, hd)
+    # y_t = r . (S + diag(u) k v^T)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, s0.astype(jnp.float32) + p["u"][None, ..., None] * kv)
+    s_new = s0.astype(jnp.float32) * w[..., None] + kv
+    y = y.reshape(b, 1, -1).astype(x.dtype)
+    y = rmsnorm(p["ln_x"], y) * jax.nn.silu(g)
+    return linear_apply(p["wo"], y, pol), (x, s_new)
+
+
+def rwkv6_init_state(batch: int, cfg: RWKV6Config, dtype=jnp.float32):
+    # tm/cm_prev live in the activation dtype (they mix with x);
+    # the WKV state accumulates in f32.
+    return {
+        "tm_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "cm_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }

@@ -1,0 +1,102 @@
+"""AdamW + schedules + global-norm clipping, pure pytree (no optax).
+
+The paper's recipe (Sec. 4.1): paged AdamW, max grad-norm 0.3, constant
+LR 2e-5 (7B/13B) or 1e-5 (33B/65B), batch 16.  "Paged" exists to survive
+optimizer-state memory spikes on GPUs; with QA-LoRA the trainable state is
+only the adapters (<<1% of params), so the TPU adaptation simply shards
+the (tiny) state with the adapters — documented in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: float = 0.3
+    schedule: str = "constant"   # constant | cosine | warmup_cosine
+    total_steps: int = 10_000
+    warmup_steps: int = 0
+
+
+def constant_schedule(cfg: AdamWConfig, step):
+    return jnp.float32(cfg.lr)
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    frac = jnp.clip(step / max(cfg.total_steps, 1), 0.0, 1.0)
+    return cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def warmup_cosine(cfg: AdamWConfig, step):
+    w = max(cfg.warmup_steps, 1)
+    warm = cfg.lr * jnp.minimum(step / w, 1.0)
+    return jnp.where(step < w, warm, cosine_schedule(cfg, step - w))
+
+
+_SCHEDULES = {"constant": constant_schedule, "cosine": cosine_schedule,
+              "warmup_cosine": warmup_cosine}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.float32(0.0)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), n
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(jnp.shape(p), jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.max_grad_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    lr = _SCHEDULES[cfg.schedule](cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, mu, nu, p) for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

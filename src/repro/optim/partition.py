@@ -1,0 +1,45 @@
+"""Trainable/frozen parameter partition.
+
+QA-LoRA trains ONLY the adapters: every leaf under an ``"ad"`` dict key
+(QALoRAParams / LoRAParams).  The quantized base, embeddings, norms,
+routers stay frozen — the optimizer never sees them, so optimizer state is
+~1e-3 of model size (the paper's Table-2 #Params column).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.tree_util import DictKey
+
+
+def _is_trainable_path(path) -> bool:
+    return any(isinstance(k, DictKey) and k.key == "ad" for k in path)
+
+
+def trainable_mask(params) -> Any:
+    """Pytree of bools, True where the leaf is an adapter parameter."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, _: _is_trainable_path(p), params)
+
+
+def split_params(params) -> Tuple[Any, Any]:
+    """(trainable, frozen): same treedef, None on the other side's leaves."""
+    train = jax.tree_util.tree_map_with_path(
+        lambda p, x: x if _is_trainable_path(p) else None, params)
+    frozen = jax.tree_util.tree_map_with_path(
+        lambda p, x: None if _is_trainable_path(p) else x, params)
+    return train, frozen
+
+
+def merge_params(trainable, frozen):
+    return jax.tree.map(lambda t, f: f if t is None else t,
+                        trainable, frozen,
+                        is_leaf=lambda x: x is None)
+
+
+def count_params(tree) -> int:
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)
+                   if hasattr(x, "shape")))

@@ -1,0 +1,2 @@
+from .hlo_analysis import analyze_hlo_text, HLOCost  # noqa: F401
+from .roofline import roofline_terms, HW, model_flops  # noqa: F401

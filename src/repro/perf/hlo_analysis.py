@@ -1,0 +1,317 @@
+"""HLO-text cost walker with while-loop trip-count multiplication.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a while-loop
+body exactly ONCE (verified empirically: a scan of 8 matmuls reports 1/8
+the FLOPs of the unrolled loop — EXPERIMENTS.md §Roofline methodology).
+Every model here scans over layers and over attention/SSM chunks, so the
+aggregate numbers are useless without loop accounting.  This walker
+parses the *optimized, SPMD-partitioned* HLO text (shapes are therefore
+per-device) and computes, recursively through called computations:
+
+  flops            2 * numel(result) * contraction_size for dot/matmul
+                   custom-calls (elementwise FLOPs excluded: MFU-style
+                   accounting; dots are >99% of model FLOPs)
+  bytes            sum(operand bytes) + result bytes for ops that move
+                   data on a TPU (dot/conv/custom-call, gather/scatter,
+                   dynamic-(update-)slice, reduce, sort, copy, transpose,
+                   collectives).  Pure-elementwise / broadcast / reshape
+                   ops are treated as fused into their consumers — the
+                   CPU backend's fusion choices differ from TPU's, so we
+                   apply the TPU fusion model explicitly rather than
+                   trusting CPU op boundaries.
+  collective_bytes sum of operand bytes of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute
+
+While-loop trip counts come from the loop condition's `constant(N)`
+compare (lax.scan always lowers to this form); unknown trip counts fall
+back to 1 with a warning flag.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|condition|body|branch_computations|called_computations|calls)="
+    r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    unknown_trip_counts: int = 0
+
+    def __add__(self, o):
+        return HLOCost(self.flops + o.flops, self.bytes + o.bytes,
+                       self.collective_bytes + o.collective_bytes,
+                       self.unknown_trip_counts + o.unknown_trip_counts)
+
+    def scaled(self, k: float):
+        return HLOCost(self.flops * k, self.bytes * k,
+                       self.collective_bytes * k, self.unknown_trip_counts)
+
+
+class _Module:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?.*\{\s*$", line)
+            if m and ("->" in line or line.startswith("ENTRY")
+                      or re.match(r"^(ENTRY\s+)?%?[\w.\-]+ \(", line)):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is not None and stripped:
+                self.computations[cur].append(stripped)
+
+    def instr_shapes(self, comp: str) -> Dict[str, str]:
+        """Map instruction name -> type string (before op name)."""
+        out = {}
+        for line in self.computations.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            # rhs starts with the result type
+            out[name] = rhs
+        return out
+
+
+def _result_type(rhs: str) -> str:
+    """Extract the leading type expression of an instruction RHS."""
+    # e.g. "bf16[16,128]{1,0} dot(%a, %b), ..." or "(f32[2], f32[3]) tuple(...)"
+    m = re.match(r"^(\([^)]*\)|[\w]+\[[^\]]*\](?:\{[^}]*\})?)", rhs)
+    return m.group(1) if m else ""
+
+
+def _opcode(rhs: str) -> str:
+    t = _result_type(rhs)
+    rest = rhs[len(t):].strip()
+    m = re.match(r"([\w\-\$]+)", rest)
+    return m.group(1) if m else ""
+
+
+def _operands(rhs: str) -> List[str]:
+    m = re.search(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", rhs[len(_result_type(rhs)):])
+    if not m:
+        return []
+    ops = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        tm = re.match(r"%?([\w.\-]+)", tok)
+        if tm:
+            ops.append(tm.group(1))
+    return ops
+
+
+def _trip_count(mod: _Module, cond_comp: str) -> Optional[int]:
+    """lax.scan cond: compare(counter, constant(N)), direction=LT."""
+    consts = {}
+    for line in mod.computations.get(cond_comp, []):
+        m = re.match(r".*%?([\w.\-]+)\s*=\s*\w+\[\]\s.*constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in mod.computations.get(cond_comp, []):
+        if "compare(" in line and "direction=LT" in line:
+            for name, val in consts.items():
+                if re.search(rf"%?{re.escape(name)}\b", line.split("compare(", 1)[1]):
+                    return val
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return None
+
+
+def _dot_flops(mod: _Module, comp: str, line: str, shapes: Dict[str, str]) -> float:
+    rhs = line.split("=", 1)[1].strip() if "=" in line else line
+    res = _first_shape(_result_type(rhs))
+    if res is None:
+        return 0.0
+    _, rdims = res
+    numel = 1
+    for d in rdims:
+        numel *= d
+    ops = _operands(rhs)
+    # contraction size from lhs shape and contracting dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    csize = 1
+    if m and ops:
+        lhs_rhs = shapes.get(ops[0], "")
+        lsh = _first_shape(lhs_rhs)
+        if lsh:
+            for ix in (int(i) for i in m.group(1).split(",") if i):
+                if ix < len(lsh[1]):
+                    csize *= lsh[1][ix]
+    return 2.0 * numel * csize
+
+
+def _conv_flops(rhs: str) -> float:
+    res = _first_shape(_result_type(rhs))
+    if res is None:
+        return 0.0
+    numel = 1
+    for d in res[1]:
+        numel *= d
+    m = re.search(r"window=\{size=([\dx]+)", rhs)
+    k = 1
+    if m:
+        for d in m.group(1).split("x"):
+            k *= int(d)
+    return 2.0 * numel * k  # per-input-channel approximation
+
+
+def analyze_computation(mod: _Module, comp: str,
+                        memo: Dict[str, HLOCost]) -> HLOCost:
+    if comp in memo:
+        return memo[comp]
+    memo[comp] = HLOCost()  # break cycles defensively
+    total = HLOCost()
+    shapes = {}
+    for line in mod.computations.get(comp, []):
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = _result_type(m.group(2))
+
+    for line in mod.computations.get(comp, []):
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op = _opcode(rhs)
+        rtype = _result_type(rhs)
+
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+            if bm:
+                body_cost = analyze_computation(mod, bm.group(1), memo)
+                trips = _trip_count(mod, cm.group(1)) if cm else None
+                if trips is None:
+                    trips = 1
+                    total += HLOCost(unknown_trip_counts=1)
+                total += body_cost.scaled(trips)
+            continue
+        if op in ("conditional",):
+            bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+            if bm:
+                branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                costs = [analyze_computation(mod, b, memo) for b in branches]
+                if costs:  # worst-case branch
+                    total += max(costs, key=lambda c: c.flops + c.bytes)
+            continue
+        if op in ("fusion", "call", "map", "reduce", "reduce-window", "sort",
+                  "scatter", "select-and-scatter", "custom-call", "dot",
+                  "convolution") or op.startswith("all-") or op in (
+                      "reduce-scatter", "collective-permute"):
+            # recurse into called computations for their dot FLOPs
+            cm = _CALLED_RE.search(rhs)
+            if cm and op in ("fusion", "call", "map"):
+                for sub in cm.group(1).split(","):
+                    sub_cost = analyze_computation(mod, sub.strip().lstrip("%"), memo)
+                    total += HLOCost(flops=sub_cost.flops)  # bytes at boundary
+
+        # FLOPs
+        if op == "dot" or (op == "custom-call" and ("matmul" in rhs.lower()
+                                                    or "dot" in rhs.lower())):
+            total += HLOCost(flops=_dot_flops(mod, comp, line, shapes))
+        elif op == "convolution":
+            total += HLOCost(flops=_conv_flops(rhs))
+
+        # bytes: only ops that move data on TPU (elementwise chains fuse).
+        # Slice-producing / in-place ops count slice-sized traffic, not the
+        # whole aliased buffer (XLA buffer reuse: DUS updates in place,
+        # gather/DS read only the addressed rows).
+        if op in ("dynamic-slice", "gather"):
+            total += HLOCost(bytes=2.0 * _shape_bytes(rtype))
+        elif op in ("dynamic-update-slice", "scatter"):
+            upd = _operands(rhs)
+            b = _shape_bytes(shapes.get(upd[1], "")) * 2.0 if len(upd) > 1 else \
+                _shape_bytes(rtype)
+            total += HLOCost(bytes=float(b))
+        elif op == "fusion" and ("dynamic-update-slice" in rhs or
+                                 "dynamic_update_slice" in rhs.lower()):
+            # in-place fusion: count all operands except the aliased big
+            # buffer (same shape as the result), plus slice-sized write
+            ops_ = _operands(rhs)
+            rbytes = _shape_bytes(rtype)
+            b, skipped = 0.0, False
+            for o in ops_:
+                ob = _shape_bytes(shapes.get(o, ""))
+                if not skipped and ob == rbytes:
+                    skipped = True  # aliased in-place operand
+                    continue
+                b += ob
+            total += HLOCost(bytes=float(b))
+        elif op in ("dot", "convolution", "custom-call", "fusion",
+                    "reduce", "reduce-window", "sort", "copy", "transpose",
+                    "concatenate", "pad", "cholesky", "triangular-solve") or \
+                any(op.startswith(c) or op == c for c in _COLLECTIVES):
+            b = _shape_bytes(rtype)
+            for o in _operands(rhs):
+                b += _shape_bytes(shapes.get(o, ""))
+            total += HLOCost(bytes=float(b))
+
+        # collectives
+        if any(op.startswith(c) or op == c for c in _COLLECTIVES):
+            cb = 0
+            for o in _operands(rhs):
+                cb += _shape_bytes(shapes.get(o, ""))
+            if cb == 0:
+                cb = _shape_bytes(rtype)
+            total += HLOCost(collective_bytes=float(cb))
+
+    memo[comp] = total
+    return total
+
+
+def analyze_hlo_text(text: str) -> HLOCost:
+    mod = _Module(text)
+    entry = mod.entry
+    if entry is None:
+        # fall back: the computation named like the module or the largest one
+        entry = max(mod.computations, key=lambda c: len(mod.computations[c]))
+    return analyze_computation(mod, entry, {})

@@ -1,0 +1,148 @@
+"""Fault-tolerance runtime scaffolding (CPU-simulatable, TPU-deployable).
+
+At 1000+ nodes the failure model is: hosts vanish (preemption/hardware),
+hosts slow down (stragglers), and the job must resume from the last
+checkpoint with a possibly different topology.  Pieces:
+
+* ``Heartbeat`` — per-host liveness file the job supervisor watches;
+  a host that stops beating past `timeout` is declared dead and the
+  supervisor restarts the job on the surviving + replacement hosts
+  (JAX SPMD jobs cannot continue through a lost participant — restart
+  from checkpoint IS the recovery path, which QA-LoRA makes cheap since
+  only adapters need re-reading; DESIGN.md §6).
+* ``StragglerDetector`` — EWMA of per-step wall time; flags hosts whose
+  step time exceeds `k` x the EWMA so the supervisor can migrate them.
+* ``PreemptionGuard`` — SIGTERM handler that flips a flag; the train loop
+  checkpoints and exits cleanly inside the grace period.
+* ``RestartableLoop`` — drives (data cursor, step counter, checkpoint
+  cadence) so a crash at any point resumes bit-identically (the data
+  pipeline is O(1)-seekable).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+import time
+from typing import Callable, Optional
+
+
+class Heartbeat:
+    def __init__(self, path: str, host_id: int = 0, interval: float = 1.0):
+        self.path = path
+        self.host_id = host_id
+        self.interval = interval
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _beat(self):
+        while not self._stop.is_set():
+            tmp = f"{self.path}.tmp"
+            with open(tmp, "w") as f:
+                json.dump({"host": self.host_id, "t": time.time()}, f)
+            os.replace(tmp, self.path)
+            self._stop.wait(self.interval)
+
+    def start(self):
+        self._thread = threading.Thread(target=self._beat, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+    @staticmethod
+    def is_alive(path: str, timeout: float) -> bool:
+        try:
+            with open(path) as f:
+                return time.time() - json.load(f)["t"] < timeout
+        except (OSError, ValueError, KeyError):
+            return False
+
+
+class StragglerDetector:
+    """EWMA step-time monitor; `check` returns True when this step is a
+    straggler (> ratio x EWMA)."""
+
+    def __init__(self, alpha: float = 0.1, ratio: float = 3.0, warmup: int = 5):
+        self.alpha, self.ratio, self.warmup = alpha, ratio, warmup
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.flagged = 0
+
+    def check(self, step_time: float) -> bool:
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = step_time
+            return False
+        is_straggler = (self.n > self.warmup
+                        and step_time > self.ratio * self.ewma)
+        if is_straggler:
+            self.flagged += 1
+        else:  # don't pollute the EWMA with outliers
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
+        return is_straggler
+
+
+class PreemptionGuard:
+    """SIGTERM -> graceful save.  Use as context manager around the loop."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._signals = signals
+        self._prev = {}
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+class RestartableLoop:
+    """Checkpoint-cadenced train loop driver.
+
+    `body(step) -> metrics` runs one step; the loop handles resume offset,
+    periodic async checkpointing via the provided callback, straggler
+    logging, and preemption-triggered final save.
+    """
+
+    def __init__(self, total_steps: int, ckpt_every: int,
+                 save_cb: Callable[[int], None],
+                 start_step: int = 0,
+                 straggler: Optional[StragglerDetector] = None,
+                 guard: Optional[PreemptionGuard] = None):
+        self.total_steps = total_steps
+        self.ckpt_every = ckpt_every
+        self.save_cb = save_cb
+        self.start_step = start_step
+        self.straggler = straggler or StragglerDetector()
+        self.guard = guard
+        self.stragglers = []
+
+    def run(self, body: Callable[[int], dict]):
+        last = self.start_step
+        for step in range(self.start_step, self.total_steps):
+            t0 = time.time()
+            metrics = body(step)
+            dt = time.time() - t0
+            if self.straggler.check(dt):
+                self.stragglers.append((step, dt))
+            last = step + 1
+            if last % self.ckpt_every == 0:
+                self.save_cb(last)
+            if self.guard is not None and self.guard.requested:
+                break
+        self.save_cb(last)
+        return last

@@ -1,0 +1,2 @@
+from .rules import (param_specs, batch_spec_tree, cache_spec_tree,  # noqa: F401
+                    spec_to_sharding, DP_AXES, TP_AXIS)

@@ -1,0 +1,185 @@
+"""PartitionSpec assignment for params / batches / caches.
+
+Megatron-style pairing on the "model" axis: QKV/up/gate shard their
+*output* dim (column-parallel), O/down shard their *input* dim
+(row-parallel) — one reduce per block.  Quantization scales/zeros and the
+QA-LoRA adapters shard *with* their base matrix (a [L=K/g, r] follows K;
+b [r, N] follows N).  MoE experts shard their expert dim over
+("data","model") when divisible — expert parallelism across the full pod —
+else fall back to TP inside the expert.
+
+Every rule is an ordered candidate list filtered by divisibility against
+the actual mesh, so any (arch x mesh) combination lowers: a dim that fits
+no axis is replicated, never an error.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+TP_AXIS = "model"
+DP_AXES = ("pod", "data")  # present subset is used
+
+# linear-role tables (dict keys that *hold* a linear param dict)
+COL = {"wq", "wk", "wv", "wg", "wr", "gate", "up", "in_proj", "q_down",
+       "q_up", "kv_down", "kv_up", "ck", "cr", "router", "mtp_proj"}
+ROW = {"wo", "down", "out_proj", "cv"}
+
+
+def _names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, GetAttrKey):
+            out.append(k.name)
+    return tuple(out)
+
+
+def _axes_size(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    group = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in group:
+        if a not in mesh_shape:
+            return 0  # axis not on this mesh -> candidate invalid
+    for a in group:
+        n *= mesh_shape[a]
+    return n
+
+
+def _pick(candidates: Sequence[Tuple], shape, mesh_shape: dict) -> P:
+    """First candidate spec (right-aligned) whose sharded dims divide."""
+    nd = len(shape)
+    for cand in candidates:
+        spec = (None,) * (nd - len(cand)) + tuple(cand)
+        ok = True
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            n = _axes_size(mesh_shape, axes)
+            if n == 0 or shape[dim] % n != 0:
+                ok = False
+                break
+        if ok:
+            return P(*spec)
+    return P()
+
+
+def _dp(mesh_shape) -> Tuple[str, ...]:
+    return tuple(a for a in DP_AXES if a in mesh_shape)
+
+
+def spec_for_param(path, leaf, mesh_shape: dict) -> P:
+    names = _names(path)
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    last = names[-1] if names else ""
+    role = ("col" if any(n in COL for n in names)
+            else "row" if any(n in ROW for n in names) else None)
+    is_expert = ("moe" in names and "shared" not in names
+                 and "router" not in names
+                 and any(n in ("gate", "up", "down") for n in names))
+    dp = _dp(mesh_shape)
+    ep = (dp + (TP_AXIS,)) if dp else (TP_AXIS,)
+
+    # embeddings / head
+    if "embed" in names:
+        return _pick([(TP_AXIS, None), (None, TP_AXIS)], shape, mesh_shape)
+    if "head" in names:
+        return _pick([(None, TP_AXIS)], shape, mesh_shape)
+
+    # matrix-dim candidates by leaf kind and role
+    if last in ("qweight", "w"):
+        mat = [(None, TP_AXIS)] if role == "col" else \
+              [(TP_AXIS, None)] if role == "row" else \
+              [(None, TP_AXIS), (TP_AXIS, None)]
+    elif last in ("scale", "zero"):
+        mat = [(None, TP_AXIS)] if role == "col" else \
+              [(TP_AXIS, None)] if role == "row" else [(None, TP_AXIS)]
+    elif last == "a":     # adapter A [L(=K/g) or K, r]
+        mat = [(TP_AXIS, None)] if role == "row" else [(None, None)]
+    elif last == "b":     # adapter B [r, N]
+        mat = [(None, TP_AXIS)] if role == "col" else [(None, None)]
+    elif last in ("codes", "absmax"):  # NF4 baseline: replicate
+        return P()
+    elif last in ("conv_w", "conv_b"):
+        mat = [(None,)]
+    else:
+        # norms / biases / small vectors: replicate
+        return P()
+
+    if is_expert and nd >= 3:
+        # try expert-dim sharding first (full-mesh EP), else TP inside expert
+        cands = [(ep,) + (None,) * len(mat[0]),
+                 ((TP_AXIS,) + (None,) * len(mat[0]))] + \
+                [(None,) + tuple(m) for m in mat]
+        return _pick(cands, shape, mesh_shape)
+    return _pick(mat, shape, mesh_shape)
+
+
+def param_specs(params, mesh: Mesh):
+    ms = dict(mesh.shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: spec_for_param(p, x, ms), params)
+
+
+def batch_spec_tree(batch, mesh: Mesh):
+    """Shard the batch dim over all DP axes (fallback: replicate)."""
+    ms = dict(mesh.shape)
+    dp = _dp(ms)
+
+    def one(x):
+        return _pick([(dp,) + (None,) * (len(x.shape) - 1)], x.shape, ms)
+
+    return jax.tree.map(one, batch)
+
+
+def cache_spec_tree(cache, mesh: Mesh):
+    """Decode caches: batch over DP if divisible, else sequence over DP
+    (long-context SP); heads/feature dims over "model"."""
+    ms = dict(mesh.shape)
+    dp = _dp(ms)
+
+    def one(path, x):
+        names = _names(path)
+        shape = tuple(x.shape)
+        nd = len(shape)
+        if names and names[-1] == "len":
+            return P()
+        if names and names[-1] in ("k", "v"):      # [..., B, S, KvH, hd]
+            cands = [(dp, None, TP_AXIS, None), (dp, None, None, TP_AXIS),
+                     (None, dp, TP_AXIS, None), (None, dp, None, TP_AXIS),
+                     (dp, None, None, None), (None, dp, None, None)]
+            return _pick(cands, shape, ms)
+        if names and names[-1] in ("c", "kr"):     # MLA [..., B, S, R]
+            cands = [(dp, None, TP_AXIS), (None, dp, TP_AXIS),
+                     (dp, None, None), (None, dp, None)]
+            return _pick(cands, shape, ms)
+        if names and names[-1] == "wkv":           # [..., B, H, K, V]
+            return _pick([(dp, TP_AXIS, None, None), (dp, None, None, None),
+                          (None, TP_AXIS, None, None)], shape, ms)
+        if names and names[-1] == "ssm":           # [..., B, H, P, N]
+            return _pick([(dp, TP_AXIS, None, None), (dp, None, None, None),
+                          (None, TP_AXIS, None, None)], shape, ms)
+        if names and names[-1] == "conv":          # [..., B, W, C]
+            return _pick([(dp, None, TP_AXIS), (dp, None, None),
+                          (None, None, TP_AXIS)], shape, ms)
+        if nd >= 2:  # prev-token states etc. [..., B, 1, d]
+            return _pick([(dp, None, TP_AXIS), (dp, None, None)], shape, ms)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def spec_to_sharding(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

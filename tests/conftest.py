@@ -1,0 +1,13 @@
+import os
+
+# smoke tests & benches must see exactly ONE device (the dry-run sets its
+# own 512-device flag as a subprocess); keep CPU math deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

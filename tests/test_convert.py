@@ -1,0 +1,67 @@
+"""fp -> QA-LoRA / QLoRA / LoRA checkpoint conversion."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import LM
+from repro.models.common import QuantPolicy
+from repro.core import convert_tree
+from repro.configs.base import ShapeCell
+from repro.configs.shapes import batch_specs
+
+
+def _fp_model():
+    cfg = C.reduced("llama7b-proxy", n_layers=2, vocab=64).scaled(
+        quant=QuantPolicy(mode="fp", dtype=jnp.float32))
+    lm = LM(cfg)
+    return cfg, lm, lm.init(jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("mode", ["qalora", "qlora", "lora"])
+def test_convert_preserves_function_at_init(mode):
+    """Adapters init at zero => converted model ~= quantized base;
+    for lora mode it must match the fp model exactly."""
+    cfg_fp, lm_fp, params = _fp_model()
+    pol = QuantPolicy(mode=mode, bits=4, group_size=16, rank=4,
+                      dtype=jnp.float32)
+    q = convert_tree(params, pol, jax.random.PRNGKey(1))
+    cfg_q = cfg_fp.scaled(quant=pol)
+    lm_q = LM(cfg_q)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, 64),
+        "labels": jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0, 64),
+    }
+    l_fp, _ = jax.jit(lm_fp.loss)(params, batch)
+    l_q, _ = jax.jit(lm_q.loss)(q, batch)
+    if mode == "lora":
+        np.testing.assert_allclose(float(l_fp), float(l_q), rtol=1e-5)
+    else:
+        assert abs(float(l_fp) - float(l_q)) < 0.5  # quantization noise only
+
+
+def test_convert_skips_routers_and_vectors():
+    from repro.models.moe import moe_init
+    from repro.models.common import QuantPolicy, FP
+    p = {"moe": moe_init(jax.random.PRNGKey(0), 32, 16, 4, FP)}
+    pol = QuantPolicy(mode="qalora", bits=4, group_size=16, rank=2,
+                      dtype=jnp.float32)
+    out = convert_tree(p, pol)
+    assert "w" in out["moe"]["router"]          # router stays fp
+    assert "q" in out["moe"]["gate"]            # experts quantized (stacked)
+    assert out["moe"]["gate"]["q"].qweight.ndim == 3  # [E, Kp, N]
+
+
+def test_convert_stacked_quantization_matches_per_layer():
+    from repro.core import quantize, dequantize
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 32, 16))
+    pol = QuantPolicy(mode="qalora", bits=4, group_size=16, rank=2,
+                      dtype=jnp.float32)
+    out = convert_tree({"up": {"w": w}}, pol)
+    qt = out["up"]["q"]
+    for i in range(3):
+        ref = quantize(w[i], 4, 16)
+        np.testing.assert_array_equal(np.asarray(qt.qweight[i]),
+                                      np.asarray(ref.qweight))

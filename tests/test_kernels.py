@@ -1,0 +1,79 @@
+"""Pallas kernel validation: interpret-mode sweeps vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize, QALoRAParams
+from repro.kernels import qmatmul, qalora_matmul, qmatmul_ref, qalora_matmul_ref
+
+SHAPES = [  # (M, K, N, group)
+    (1, 64, 48, 16),
+    (7, 128, 96, 32),
+    (33, 256, 256, 64),
+    (128, 512, 128, 32),
+]
+BITS = [2, 3, 4, 8]
+
+
+def _setup(bits, m, k, n, g, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (k, n))
+    qt = quantize(w, bits, g)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k)).astype(dtype)
+    p = QALoRAParams(
+        a=jax.random.normal(jax.random.fold_in(key, 2), (k // g, 8), dtype) * 0.3,
+        b=jax.random.normal(jax.random.fold_in(key, 3), (8, n), dtype) * 0.3)
+    return x, qt, p
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_qmatmul_matches_ref(bits, shape):
+    m, k, n, g = shape
+    x, qt, _ = _setup(bits, m, k, n, g, jnp.float32)
+    y = qmatmul(x, qt, interpret=True)
+    yr = qmatmul_ref(x, qt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_qalora_fused_matches_ref(bits, shape):
+    m, k, n, g = shape
+    x, qt, p = _setup(bits, m, k, n, g, jnp.float32)
+    y = qalora_matmul(x, qt, p, s=0.7, interpret=True)
+    yr = qalora_matmul_ref(x, qt, p, 0.7)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    x, qt, p = _setup(4, 16, 128, 64, 32, dtype)
+    y = qalora_matmul(x, qt, p, s=1.0, interpret=True)
+    yr = qalora_matmul_ref(x, qt, p, 1.0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol)
+    assert y.dtype == dtype
+
+
+def test_kernel_leading_dims():
+    """ops.py flattens [B, S, K] activations."""
+    x, qt, p = _setup(4, 12, 128, 64, 32, jnp.float32)
+    x3 = jax.random.normal(jax.random.PRNGKey(5), (3, 4, 128))
+    y = qalora_matmul(x3, qt, p, s=0.5, interpret=True)
+    yr = qalora_matmul_ref(x3.reshape(12, 128), qt, p, 0.5).reshape(3, 4, 64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+def test_block_picker_constraints():
+    from repro.kernels import pick_blocks
+    from repro.core.quant import codes_per_byte
+    for bits in BITS:
+        for k in (64, 512, 22016):
+            for n in (48, 1152, 14336):
+                bm, bn, bk = pick_blocks(128, k, n, bits, 32)
+                assert k % bk == 0 and n % bn == 0
+                assert bk % 32 == 0 and bk % codes_per_byte(bits) == 0

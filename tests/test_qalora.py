@@ -1,0 +1,138 @@
+"""The paper's core invariants.
+
+1. MERGE EXACTNESS (Appendix B): qalora_forward == x @ dequant(merge(...))
+   bit-for-bit up to fp tolerance, for every bit width / group size — the
+   merged model stays INT-N.
+2. QLoRA's merge is fp; re-quantizing it (PTQ) INTRODUCES error, QA-LoRA's
+   doesn't — the paper's central experimental contrast (Fig. 1 / Table 1).
+3. Group pooling really constrains the adapter: effective full-rank update
+   has group-constant rows.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (quantize, dequantize, QALoRAParams, init_qalora,
+                        qalora_forward, merge, group_pool, adapter_delta,
+                        LoRAParams, init_lora, qlora_quantize_base,
+                        qlora_forward, qlora_merge_fp, qlora_merge_ptq)
+
+
+def _adapter(key, n_groups, rank, d_out, scale=0.3):
+    k1, k2 = jax.random.split(key)
+    return QALoRAParams(
+        a=jax.random.normal(k1, (n_groups, rank)) * scale,
+        b=jax.random.normal(k2, (rank, d_out)) * scale)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    group=st.sampled_from([16, 32, 64]),
+    d_in=st.sampled_from([64, 128]),
+    d_out=st.sampled_from([16, 48]),
+    rank=st.sampled_from([1, 4, 8]),
+    s=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**16),
+)
+def test_merge_exactness_property(bits, group, d_in, d_out, rank, s, seed):
+    if group > d_in:
+        group = d_in
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (d_in, d_out))
+    qt = quantize(w, bits, group)
+    p = _adapter(jax.random.fold_in(k, 1), d_in // group, rank, d_out)
+    x = jax.random.normal(jax.random.fold_in(k, 2), (5, d_in))
+    y_adapter = qalora_forward(x, qt, p, s)
+    merged = merge(qt, p, s)
+    y_merged = x @ dequantize(merged)
+    np.testing.assert_allclose(np.asarray(y_adapter), np.asarray(y_merged),
+                               rtol=2e-4, atol=2e-4)
+    # integer codes and scales untouched
+    np.testing.assert_array_equal(np.asarray(merged.qweight), np.asarray(qt.qweight))
+    np.testing.assert_array_equal(np.asarray(merged.scale), np.asarray(qt.scale))
+
+
+def test_adapter_effective_weight_is_group_constant():
+    k = jax.random.PRNGKey(0)
+    d_in, g, r, d_out = 64, 16, 4, 24
+    p = _adapter(k, d_in // g, r, d_out)
+    # effective weight row i = (A@B)[group(i)]
+    eye = jnp.eye(d_in)
+    eff = adapter_delta(eye, p, 1.0, g)  # [d_in, d_out]
+    eff = np.asarray(eff).reshape(d_in // g, g, d_out)
+    for grp in eff:
+        np.testing.assert_allclose(grp, np.broadcast_to(grp[0], grp.shape),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_init_adapter_is_identity():
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (64, 32))
+    qt = quantize(w, 4, 16)
+    p = init_qalora(k, 4, 8, 32)  # B = 0
+    x = jax.random.normal(k, (3, 64))
+    np.testing.assert_allclose(np.asarray(qalora_forward(x, qt, p, 2.0)),
+                               np.asarray(x @ dequantize(qt)), rtol=1e-5)
+
+
+def test_qlora_ptq_lossy_qalora_not():
+    """The headline: after merging, QA-LoRA output is exact; QLoRA needs
+    PTQ which perturbs outputs."""
+    k = jax.random.PRNGKey(7)
+    d_in, d_out, r, g, s = 128, 64, 8, 32, 1.0
+    w = jax.random.normal(k, (d_in, d_out))
+    x = jax.random.normal(jax.random.fold_in(k, 1), (16, d_in))
+
+    # QA-LoRA path
+    qt = quantize(w, 4, g)
+    pq = _adapter(jax.random.fold_in(k, 2), d_in // g, r, d_out)
+    err_qalora = float(jnp.max(jnp.abs(
+        qalora_forward(x, qt, pq, s) - x @ dequantize(merge(qt, pq, s)))))
+
+    # QLoRA path
+    nf4 = qlora_quantize_base(w)
+    pl = LoRAParams(a=jax.random.normal(k, (d_in, r)) * 0.3,
+                    b=jax.random.normal(jax.random.fold_in(k, 3), (r, d_out)) * 0.3)
+    y_ft = qlora_forward(x, nf4, pl, s)
+    y_ptq = x @ dequantize(qlora_merge_ptq(nf4, pl, s, bits=4, group_size=g))
+    err_qlora_ptq = float(jnp.max(jnp.abs(y_ft - y_ptq)))
+
+    assert err_qalora < 1e-3
+    assert err_qlora_ptq > 10 * err_qalora
+
+
+def test_qlora_merge_is_fp_not_quantized():
+    k = jax.random.PRNGKey(8)
+    w = jax.random.normal(k, (64, 32))
+    nf4 = qlora_quantize_base(w)
+    p = init_lora(k, 64, 4, 32)
+    merged = qlora_merge_fp(nf4, p, 1.0)
+    assert merged.dtype in (jnp.float32, jnp.bfloat16)  # fp fallback
+
+
+def test_group_pool_matches_avgpool_times_g():
+    """Algorithm 1: QA(x) * (D_in//L) with AvgPool == sum pooling."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 64))
+    g = 16
+    pooled = group_pool(x, g)
+    manual = x.reshape(4, 6, 4, 16).mean(-1) * 16
+    np.testing.assert_allclose(np.asarray(pooled), np.asarray(manual), rtol=1e-5)
+
+
+def test_gradients_flow_only_through_adapter():
+    k = jax.random.PRNGKey(9)
+    w = jax.random.normal(k, (64, 32))
+    qt = quantize(w, 4, 16)
+    p = _adapter(k, 4, 4, 32)
+    x = jax.random.normal(k, (8, 64))
+
+    def loss(p_):
+        return jnp.sum(qalora_forward(x, qt, p_, 1.0) ** 2)
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g.a).sum()) > 0
+    assert float(jnp.abs(g.b).sum()) > 0

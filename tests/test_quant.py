@@ -1,0 +1,91 @@
+"""Quantizer unit + property tests: pack/unpack, RTN bounds, GPTQ, NF4."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (quantize, dequantize, pack, unpack, gptq_quantize_from_calibration,
+                        nf4_quantize, nf4_dequantize)
+from repro.core.quant import codes_per_byte, quantization_error
+
+BITS = [2, 3, 4, 8]
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_pack_unpack_roundtrip(bits):
+    rng = np.random.default_rng(0)
+    cpb = codes_per_byte(bits)
+    q = rng.integers(0, 2**bits, size=(cpb * 12, 7)).astype(np.uint8)
+    packed = pack(jnp.asarray(q), bits)
+    assert packed.shape[0] == q.shape[0] // cpb
+    out = unpack(packed, bits)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    bits=st.sampled_from(BITS),
+    d_in=st.sampled_from([32, 64, 128]),
+    d_out=st.sampled_from([8, 24, 48]),
+    group=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_rtn_error_bound(bits, d_in, d_out, group, seed):
+    """RTN error per element is bounded by alpha/2 (half a quantization step)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d_in, d_out))
+    qt = quantize(w, bits, group)
+    err = jnp.abs(dequantize(qt) - w)
+    step = jnp.repeat(qt.scale, group, axis=0)
+    assert bool(jnp.all(err <= step * 0.5 + 1e-5))
+
+
+def test_error_decreases_with_bits():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    errs = [float(quantization_error(w, b, 32)) for b in BITS]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_error_decreases_with_smaller_groups():
+    """Paper Table 5: larger L (smaller group) => smaller quantization loss."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 64))
+    errs = [float(quantization_error(w, 2, g)) for g in (128, 64, 32)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_gptq_beats_rtn_on_output_mse():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((128, 96)).astype(np.float32)
+    x = rng.standard_normal((512, 128)).astype(np.float32)
+    qg = gptq_quantize_from_calibration(w, x, 4, 32)
+    qr = quantize(jnp.asarray(w), 4, 32)
+    err_g = float(np.mean((x @ np.asarray(dequantize(qg)) - x @ w) ** 2))
+    err_r = float(np.mean((x @ np.asarray(dequantize(qr)) - x @ w) ** 2))
+    assert err_g < err_r
+
+
+def test_gptq_int_codes_valid():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    qt = gptq_quantize_from_calibration(w, x, 3, 16)
+    codes = np.asarray(unpack(qt.qweight, 3))
+    assert codes.max() <= 7 and codes.min() >= 0
+
+
+def test_nf4_roundtrip_better_than_int2():
+    w = jax.random.normal(jax.random.PRNGKey(5), (128, 64))
+    nf = nf4_dequantize(nf4_quantize(w))
+    e_nf4 = float(jnp.mean((nf - w) ** 2))
+    e_int2 = float(quantization_error(w, 2, 64))
+    e_int8 = float(quantization_error(w, 8, 64))
+    assert e_int8 < e_nf4 < e_int2
+
+
+def test_abstract_quantized_shapes():
+    from repro.core import abstract_quantized
+    qt = abstract_quantized(128, 64, 4, 32)
+    assert qt.qweight.shape == (64, 64)
+    assert qt.scale.shape == (4, 64)
+    assert qt.d_in == 128 and qt.d_out == 64

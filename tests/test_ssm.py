@@ -1,0 +1,109 @@
+"""Chunked SSD (Mamba2) and chunked WKV (RWKV6) vs naive per-token
+recurrences, plus decode-step vs full-sequence consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (Mamba2Config, RWKV6Config, _ssd_chunk, _wkv_chunk,
+                              mamba2_init, mamba2_mix, mamba2_decode,
+                              mamba2_init_state, rwkv6_init, rwkv6_time_mix,
+                              rwkv6_decode_time_mix)
+from repro.models.common import QuantPolicy
+
+FP = QuantPolicy(mode="fp")
+
+
+def _naive_ssd(h0, u, bmat, cmat, loga):
+    """h_t = a_t h_{t-1} + u_t (x) B_t ; y_t = h_t C_t."""
+    b, q, h, p = u.shape
+    n = bmat.shape[-1]
+    ys = []
+    ht = h0
+    for t in range(q):
+        a = jnp.exp(loga[:, t])  # [B,H]
+        ht = ht * a[..., None, None] + jnp.einsum("bhp,bn->bhpn", u[:, t], bmat[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", ht, cmat[:, t]))
+    return ht, jnp.stack(ys, 1)  # [B,Q,H,P]
+
+
+def test_ssd_chunk_matches_naive():
+    key = jax.random.PRNGKey(0)
+    b, q, h, p, n = 2, 16, 3, 4, 5
+    cfg = Mamba2Config(d_model=8, ssm_state=n, head_dim=p, chunk=q)
+    u = jax.random.normal(key, (b, q, h, p))
+    bmat = jax.random.normal(jax.random.fold_in(key, 1), (b, q, n))
+    cmat = jax.random.normal(jax.random.fold_in(key, 2), (b, q, n))
+    loga = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (b, q, h)))
+    h0 = jax.random.normal(jax.random.fold_in(key, 4), (b, h, p, n))
+    h_new, y = _ssd_chunk(h0, (u, bmat, cmat, loga), cfg)
+    h_ref, y_ref = _naive_ssd(h0, u, bmat, cmat, loga)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref.transpose(0, 1, 2, 3)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_new), np.asarray(h_ref), rtol=1e-4, atol=1e-4)
+
+
+def _naive_wkv(s0, r, k, v, logw, u):
+    """y_t = r.(S + diag(u) k v^T); S' = diag(w) S + k v^T."""
+    b, q, h, hd = r.shape
+    ys = []
+    s = s0
+    for t in range(q):
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        ys.append(jnp.einsum("bhk,bhkv->bhv", r[:, t], s + u[None, ..., None] * kv))
+        s = s * jnp.exp(logw[:, t])[..., None] + kv
+    return s, jnp.stack(ys, 1)
+
+
+def test_wkv_chunk_matches_naive():
+    key = jax.random.PRNGKey(1)
+    b, q, h, hd = 2, 8, 3, 4
+    cfg = RWKV6Config(d_model=12, d_ff=16, head_dim=hd, chunk=q)
+    r = jax.random.normal(key, (b, q, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, q, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, q, h, hd))
+    logw = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (b, q, h, hd)))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (h, hd)) * 0.1
+    s0 = jax.random.normal(jax.random.fold_in(key, 5), (b, h, hd, hd))
+    s_new, y = _wkv_chunk(s0, (r, k, v, logw), cfg, u)
+    s_ref, y_ref = _naive_wkv(s0, r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_new), np.asarray(s_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_decode_matches_prefill():
+    """Running the chunked path over S tokens == S single decode steps."""
+    key = jax.random.PRNGKey(2)
+    cfg = Mamba2Config(d_model=16, ssm_state=8, head_dim=8, chunk=4)
+    p = mamba2_init(key, cfg, FP)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 16)) * 0.5
+    y_full, state_full = mamba2_mix(p, x, cfg, FP, return_state=True)
+    st = mamba2_init_state(2, cfg)
+    ys = []
+    for t in range(8):
+        y, st = mamba2_decode(p, x[:, t : t + 1], st, cfg, FP)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state_full["ssm"]), np.asarray(st["ssm"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv6_decode_matches_prefill():
+    key = jax.random.PRNGKey(3)
+    cfg = RWKV6Config(d_model=16, d_ff=32, head_dim=8, chunk=4)
+    p = rwkv6_init(key, cfg, FP)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 16)) * 0.5
+    y_full, (last_x, s_full) = rwkv6_time_mix(p, x, cfg, FP)
+    prev = jnp.zeros((2, 1, 16))
+    s = jnp.zeros((2, 2, 8, 8))
+    ys = []
+    for t in range(8):
+        y, (prev, s) = rwkv6_decode_time_mix(p, x[:, t : t + 1], (prev, s), cfg, FP)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s), rtol=2e-3, atol=2e-3)
