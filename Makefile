@@ -1,0 +1,17 @@
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke verify dev-deps
+
+dev-deps:
+	pip install -r requirements-dev.txt
+
+# tier-1: the suite must run green from a clean checkout
+test:
+	$(PY) -m pytest -x -q
+
+# decode/kernel micro-bench as a smoke check (writes experiments/bench_results.json)
+smoke:
+	$(PY) -m benchmarks.run --only kernels,decode
+
+verify: test smoke

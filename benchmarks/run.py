@@ -8,6 +8,8 @@
   table6  fine-tuning-dataset axis (3 unseen tasks)
   fig3    fine-tuning dataset-size axis
   kernels micro-bench of the Pallas kernels (interpret on CPU) + oracle
+  decode  decode-path bench: M=1 GEMV vs padded matmul, autotuned blocks,
+          prefill+scan vs per-token loop (tok/s, us/step)
   roofline summary of experiments/roofline.json (run dryrun first)
 
 Each prints CSV ``name,us_per_call,derived`` style rows and everything is
@@ -273,6 +275,113 @@ def kernels_bench():
                  "us/call CPU-interpret (correctness harness, not TPU perf)")
 
 
+def decode_bench():
+    """Decode-path micro-benchmarks (the serve hot path).
+
+    (a) kernel level: M=1 dequant matvec via the GEMV kernel (grid over
+        (N, K) only) vs the same call padded to an MXU block_m=128 — the
+        cost a production matmul-only path pays per decode token — across
+        2/3/4-bit and g in {16, 32, 64};
+    (b) block-shape autotuner: measured-best blocks for the decode shape,
+        persisted to experiments/autotune_cache.json;
+    (c) model level: prefill + lax.scan decode (one compiled program for
+        the whole generation) vs the legacy per-token Python loop.
+    """
+    import repro.configs as C
+    from repro.core import quantize
+    from repro.kernels import autotune, pick_blocks
+    from repro.kernels.qmatmul import qmatmul_pallas
+    from repro.kernels.qmatvec import qmatvec_pallas
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.serve import (merge_model, make_scan_generator,
+                                    make_loop_generator)
+    from repro.models.common import QuantPolicy
+    from repro.models.lm import LM
+
+    def timed(fn, reps=5):
+        fn()  # compile
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        return (time.time() - t0) / reps * 1e6
+
+    def flops_of(fn, *args):
+        c = jax.jit(fn).lower(*args).compile().cost_analysis()
+        if isinstance(c, list):
+            c = c[0]
+        return float(c.get("flops", 0.0))
+
+    # (a) GEMV vs padded-to-128 matmul at the decode shape.  Wall clock in
+    # interpret mode is dominated by the Python interpreter + the (shared)
+    # dequant, so the headline metric is the XLA op count: the MXU work the
+    # padded path issues per decode step vs the GEMV grid.
+    key = jax.random.PRNGKey(0)
+    k, n = 512, 256
+    x1 = jax.random.normal(key, (1, k))
+    x128 = jnp.concatenate([x1, jnp.zeros((127, k))], axis=0)
+    for bits in (2, 3, 4):
+        for g in (16, 32, 64):
+            qt = quantize(jax.random.normal(key, (k, n)), bits, g)
+            _, bn, bk = pick_blocks(1, k, n, bits, g)
+            gemv = lambda a: qmatvec_pallas(
+                a, qt.qweight, qt.scale, qt.zero, bits=bits, group_size=g,
+                block_n=bn, block_k=bk, interpret=True)
+            padded = lambda a: qmatmul_pallas(
+                a, qt.qweight, qt.scale, qt.zero, bits=bits, group_size=g,
+                block_m=128, block_n=bn, block_k=bk, interpret=True)
+            f_gemv = flops_of(gemv, x1)
+            f_pad = flops_of(padded, x128)
+            us_gemv = timed(lambda: gemv(x1))
+            us_pad = timed(lambda: padded(x128))
+            if f_gemv > 0:  # some backends report no 'flops' key
+                ratio, how = f_pad / f_gemv, "flops/step"
+            else:
+                ratio, how = us_pad / us_gemv, "us/step (no flops reported)"
+            emit("decode", f"qmatvec-m1-int{bits}-g{g}", round(ratio, 1),
+                 f"x fewer {how} vs padded-128 "
+                 f"({f_gemv:.0f} vs {f_pad:.0f} flops); wall {us_gemv:.0f}us "
+                 f"vs {us_pad:.0f}us CPU-interpret")
+
+    # (b) autotune the decode shape and persist the winner
+    best = autotune.measure_qmatmul(1, k, n, 4, 32)
+    emit("decode", "autotune-m1-int4-g32", "x".join(map(str, best)),
+         f"measured-best blocks -> {autotune.cache_path()}")
+
+    # (c) whole-model: prefill+scan vs the per-token loop
+    b, prompt_len, gen_len = 2, 8, 8
+    max_len = prompt_len + gen_len
+    for bits in (2, 3, 4):
+        for g in (16, 32, 64):
+            pol = QuantPolicy(mode="qalora", bits=bits, group_size=g, rank=4,
+                              dtype=jnp.float32, scale_dtype=jnp.float32)
+            # d_ff=128 so every group size in the sweep divides every linear
+            cfg = C.reduced("gemma3-1b", quant=pol, d_ff=128)
+            lm = LM(cfg)
+            params = lm.init(jax.random.PRNGKey(0))
+            merged = merge_model(params, pol)
+            prompts = np.random.default_rng(0).integers(
+                4, cfg.vocab, size=(b, prompt_len)).astype(np.int32)
+            mesh = make_cpu_mesh()
+            with mesh:
+                # build each path's jitted callables once, warm them
+                # (compile on the first call), then time the second call —
+                # so the row measures decode throughput, not trace/compile
+                scan = make_scan_generator(lm, mesh, merged, prompts.shape,
+                                           gen_len, max_len)
+                loop = make_loop_generator(lm, merged, gen_len, max_len)
+                scan(prompts), loop(prompts)
+                toks_s, dt_s = scan(prompts)
+                toks_l, dt_l = loop(prompts)
+            assert np.array_equal(toks_s, toks_l), "scan != loop tokens"
+            us_s = dt_s / gen_len * 1e6
+            us_l = dt_l / gen_len * 1e6
+            emit("decode", f"scan-int{bits}-g{g}",
+                 round(b * gen_len / dt_s, 1),
+                 f"tok/s; {us_s:.0f}us/step scan vs {us_l:.0f}us/step loop "
+                 f"({us_l / us_s:.1f}x); 1 compiled program vs "
+                 f"{max_len - 1} dispatches")
+
+
 def roofline_summary():
     path = "experiments/roofline.json"
     if not os.path.exists(path):
@@ -296,6 +405,7 @@ TABLES = {
     "fig3": fig3_dataset_size,
     "ablation_rank": ablation_rank,
     "kernels": kernels_bench,
+    "decode": decode_bench,
     "roofline": roofline_summary,
 }
 

@@ -3,9 +3,18 @@
 ``qmatmul``       — group-wise WxA16 dequant matmul (x @ dequant(W_q))
 ``qalora_matmul`` — fused base matmul + group-pooled LoRA adapter
 
+Both wrappers dispatch on shape: flattened M <= ``GEMV_MAX_M`` routes to
+the decode-optimized GEMV kernels in :mod:`repro.kernels.qmatvec` (grid
+over (N, K) only — no M tiling/padding).  Block shapes come from the
+autotune cache when present (:mod:`repro.kernels.autotune`), else a
+static heuristic.
+
 Each has a pure-jnp oracle in :mod:`repro.kernels.ref`; CPU validation
 runs with ``interpret=True``.
 """
 
-from .ops import qmatmul, qalora_matmul, flash_mha, pick_blocks  # noqa: F401
+from .ops import (qmatmul, qalora_matmul, flash_mha, pick_blocks,  # noqa: F401
+                  heuristic_blocks)
+from .qmatvec import GEMV_MAX_M  # noqa: F401
 from .ref import qmatmul_ref, qalora_matmul_ref  # noqa: F401
+from . import autotune  # noqa: F401

@@ -1,0 +1,214 @@
+"""Measure-and-cache block-shape autotuner for the quantized kernels.
+
+`ops.pick_blocks` used to be a pure heuristic (largest MXU-aligned
+divisor under a VMEM cap).  That is still the no-measure fallback, but
+block shapes are now resolved in three steps:
+
+  1. cache hit  — `experiments/autotune_cache.json`, keyed on
+     ``(m, k, n, bits, group_size, rank, backend)``;
+  2. measure    — when enabled, time every legal candidate on the live
+     backend (interpret on CPU, Mosaic on TPU) and persist the winner;
+  3. heuristic  — the original static rule.
+
+Measurement is opt-in because it runs real kernels: set
+``REPRO_AUTOTUNE=1`` (or pass ``measure=True`` / call :func:`warm`) to
+populate the cache.  Entries are plain JSON ``key -> [bm, bn, bk]`` so
+the cache is human-diffable and deleting the file resets everything.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+MEASURE_ENV = "REPRO_AUTOTUNE"
+DEFAULT_CACHE_PATH = os.path.join("experiments", "autotune_cache.json")
+
+_cache: Optional[Dict[str, List[int]]] = None
+_cache_path_loaded: Optional[str] = None
+
+
+def cache_path() -> str:
+    return os.environ.get(CACHE_ENV, DEFAULT_CACHE_PATH)
+
+
+def measure_enabled() -> bool:
+    return os.environ.get(MEASURE_ENV, "") not in ("", "0", "false")
+
+
+def cache_key(m: int, k: int, n: int, bits: int, group_size: int,
+              rank: int, backend: str) -> str:
+    return f"m{m}_k{k}_n{n}_b{bits}_g{group_size}_r{rank}_{backend}"
+
+
+def _load() -> Dict[str, List[int]]:
+    global _cache, _cache_path_loaded
+    path = cache_path()
+    if _cache is None or _cache_path_loaded != path:
+        _cache_path_loaded = path
+        try:
+            with open(path) as f:
+                _cache = {k: list(v) for k, v in json.load(f).items()}
+        except (OSError, ValueError):
+            _cache = {}
+    return _cache
+
+
+def _save() -> None:
+    path = cache_path()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(_cache or {}, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear_cache(persist: bool = True) -> None:
+    """Drop all entries (and the on-disk file unless ``persist=False``)."""
+    global _cache
+    _cache = {}
+    if persist:
+        try:
+            os.remove(cache_path())
+        except OSError:
+            pass
+
+
+def lookup(key: str) -> Optional[Tuple[int, int, int]]:
+    v = _load().get(key)
+    return tuple(v) if v else None
+
+
+def record(key: str, blocks: Tuple[int, int, int]) -> None:
+    _load()[key] = list(blocks)
+    _save()
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def _divisors_of(n: int, mult: int, cap: int) -> List[int]:
+    """Multiples of ``mult`` dividing ``n``, up to ``cap``."""
+    out = []
+    d = mult
+    while d <= min(cap, n):
+        if n % d == 0:
+            out.append(d)
+        d += mult
+    return out or [mult]
+
+
+def candidates(m: int, k: int, n: int, bits: int, group_size: int,
+               max_bk: int = 4, max_bn: int = 4) -> List[Tuple[int, int, int]]:
+    """Legal (bm, bn, bk) triples: bk a multiple of lcm(group, cpb) that
+    divides K, bn dividing N (128-aligned when possible), VMEM-bounded.
+    Bounded to the ``max_bk`` largest K blocks x ``max_bn`` largest N
+    blocks so measurement samples across BOTH axes rather than
+    exhausting bn under a single bk."""
+    from repro.core.quant import codes_per_byte
+
+    cpb = codes_per_byte(bits)
+    kmult = group_size * cpb // math.gcd(group_size, cpb)
+    bks = _divisors_of(k, kmult, 2048)
+    nmult = 128 if n % 128 == 0 else 8
+    bns = _divisors_of(n, nmult, 512)
+    bm = min(128, m)
+    out = []
+    for bk in sorted(bks, reverse=True)[:max_bk]:
+        for bn in sorted(bns, reverse=True)[:max_bn]:
+            # x + unpacked w tile + f32 acc, 4B elements, keep under ~4MB
+            vmem = 4 * (bm * bk + bk * bn + bm * bn)
+            if vmem > 4 * 2**20:
+                continue
+            out.append((bm, bn, bk))
+    return out or [(bm, bns[0], bks[0])]
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def _time_call(fn, reps: int = 3) -> float:
+    import jax
+
+    jax.block_until_ready(fn())  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def measure_qmatmul(m: int, k: int, n: int, bits: int, group_size: int,
+                    rank: int = 0, s: float = 1.0,
+                    interpret: Optional[bool] = None,
+                    reps: int = 3) -> Tuple[int, int, int]:
+    """Time every candidate for the (fused when rank>0) kernel; return and
+    persist the fastest block triple."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.quant import quantize
+    from .qmatmul import qmatmul_pallas
+    from .qalora_fused import qalora_matmul_pallas
+    from .qmatvec import GEMV_MAX_M, qmatvec_pallas, qalora_matvec_pallas
+
+    backend = jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    key0 = jax.random.PRNGKey(0)
+    x = jax.random.normal(key0, (m, k), jnp.float32)
+    qt = quantize(jax.random.normal(key0, (k, n)), bits, group_size)
+    a = b = None
+    if rank:
+        a = jax.random.normal(key0, (k // group_size, rank)) * 0.1
+        b = jax.random.normal(key0, (rank, n)) * 0.1
+
+    best, best_t = None, float("inf")
+    for bm, bn, bk in candidates(m, k, n, bits, group_size):
+        try:
+            if m <= GEMV_MAX_M:
+                if rank:
+                    fn = lambda: qalora_matvec_pallas(
+                        x, qt.qweight, qt.scale, qt.zero, a, b, s=s,
+                        bits=bits, group_size=group_size, block_n=bn,
+                        block_k=bk, interpret=interpret)
+                else:
+                    fn = lambda: qmatvec_pallas(
+                        x, qt.qweight, qt.scale, qt.zero, bits=bits,
+                        group_size=group_size, block_n=bn, block_k=bk,
+                        interpret=interpret)
+            elif rank:
+                fn = lambda: qalora_matmul_pallas(
+                    x, qt.qweight, qt.scale, qt.zero, a, b, s=s, bits=bits,
+                    group_size=group_size, block_m=bm, block_n=bn,
+                    block_k=bk, interpret=interpret)
+            else:
+                fn = lambda: qmatmul_pallas(
+                    x, qt.qweight, qt.scale, qt.zero, bits=bits,
+                    group_size=group_size, block_m=bm, block_n=bn,
+                    block_k=bk, interpret=interpret)
+            t = _time_call(fn, reps)
+        except Exception:  # illegal tiling on this backend: skip candidate
+            continue
+        if t < best_t:
+            best, best_t = (bm, bn, bk), t
+    if best is None:  # every candidate failed; fall back to heuristic
+        from .ops import heuristic_blocks
+        best = heuristic_blocks(m, k, n, bits, group_size)
+    record(cache_key(m, k, n, bits, group_size, rank, backend), best)
+    return best
+
+
+def warm(shapes, bits: int = 4, group_size: int = 32, rank: int = 0) -> None:
+    """Pre-populate the cache for an iterable of (m, k, n) shapes."""
+    for m, k, n in shapes:
+        measure_qmatmul(m, k, n, bits, group_size, rank)

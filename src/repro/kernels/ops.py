@@ -1,10 +1,16 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Handles leading-dim flattening, M-padding to the block size, block-shape
-heuristics (MXU-aligned 128-multiples that divide the model dims), and the
-CPU fallback: ``interpret=True`` executes the kernel body in Python on CPU
-so correctness is testable everywhere; on TPU the same code lowers to
-Mosaic.
+resolution (autotune cache -> measurement -> MXU-aligned heuristic — see
+:mod:`repro.kernels.autotune`), shape-based dispatch between the matmul
+and decode-GEMV kernels, and the CPU fallback: ``interpret=True``
+executes the kernel body in Python on CPU so correctness is testable
+everywhere; on TPU the same code lowers to Mosaic.
+
+Dispatch: after flattening the leading dims, calls with M <=
+``GEMV_MAX_M`` (= 8) route to :mod:`repro.kernels.qmatvec`, whose grid
+runs over (N, K) only — no M tiling, no padding a single decode token up
+to an MXU block.  Larger M takes the (M, N, K)-tiled matmul.
 """
 
 from __future__ import annotations
@@ -18,8 +24,10 @@ import jax.numpy as jnp
 from repro.core.quant import QuantizedLinear, codes_per_byte
 from repro.core.qalora import QALoRAParams
 
+from . import autotune
 from .qmatmul import qmatmul_pallas
 from .qalora_fused import qalora_matmul_pallas
+from .qmatvec import GEMV_MAX_M, qmatvec_pallas, qalora_matvec_pallas
 
 
 def _default_interpret() -> bool:
@@ -38,9 +46,9 @@ def _largest_divisor(n: int, cap: int, mult: int) -> int:
     return best
 
 
-def pick_blocks(m: int, k: int, n: int, bits: int, group_size: int,
-                rank: int = 0):
-    """VMEM-budgeted, MXU-aligned block shapes (see DESIGN.md Sec. 2)."""
+def heuristic_blocks(m: int, k: int, n: int, bits: int, group_size: int,
+                     rank: int = 0):
+    """Static VMEM-budgeted, MXU-aligned block shapes (no measurement)."""
     cpb = codes_per_byte(bits)
     kmult = group_size * cpb // math.gcd(group_size, cpb)
     block_k = _largest_divisor(k, 512, kmult)
@@ -48,6 +56,21 @@ def pick_blocks(m: int, k: int, n: int, bits: int, group_size: int,
     block_m = min(128, m) if m % min(128, m) == 0 else min(128, m)
     # x + unpacked w + acc must fit VMEM comfortably (<2MB at defaults)
     return block_m, block_n, block_k
+
+
+def pick_blocks(m: int, k: int, n: int, bits: int, group_size: int,
+                rank: int = 0, measure: bool = None):
+    """Resolve block shapes: autotune cache hit -> (optional) measurement
+    -> static heuristic.  Measurement runs only when ``measure=True`` or
+    ``REPRO_AUTOTUNE=1`` — it times real kernels (see autotune.py)."""
+    backend = jax.default_backend()
+    key = autotune.cache_key(m, k, n, bits, group_size, rank, backend)
+    hit = autotune.lookup(key)
+    if hit is not None:
+        return hit
+    if measure or (measure is None and autotune.measure_enabled()):
+        return autotune.measure_qmatmul(m, k, n, bits, group_size, rank)
+    return heuristic_blocks(m, k, n, bits, group_size, rank)
 
 
 def _flatten_pad(x, block_m_cap: int = 128):
@@ -61,12 +84,28 @@ def _flatten_pad(x, block_m_cap: int = 128):
     return x2, lead, m, bm
 
 
+def _dispatch(x):
+    """Flatten leading dims; returns (lead, m, use_gemv)."""
+    *lead, _ = x.shape
+    m = int(math.prod(lead)) if lead else 1
+    return lead, m, m <= GEMV_MAX_M
+
+
 @functools.partial(jax.jit, static_argnames=("s", "out_dtype", "interpret"))
 def qmatmul(x, qt: QuantizedLinear, s=None, out_dtype=None, interpret=None):
-    """y = x @ dequant(qt); any leading dims on x."""
+    """y = x @ dequant(qt); any leading dims on x.  Small-M calls (decode)
+    dispatch to the GEMV kernel automatically."""
     interpret = _default_interpret() if interpret is None else interpret
-    x2, lead, m, bm = _flatten_pad(x)
     k, n = qt.d_in, qt.d_out
+    lead, m, use_gemv = _dispatch(x)
+    if use_gemv:
+        _, bn, bk = pick_blocks(m, k, n, qt.bits, qt.group_size)
+        y = qmatvec_pallas(
+            x.reshape(m, k), qt.qweight, qt.scale, qt.zero, bits=qt.bits,
+            group_size=qt.group_size, block_n=bn, block_k=bk,
+            out_dtype=out_dtype or x.dtype, interpret=interpret)
+        return y.reshape(*lead, n)
+    x2, lead, m, bm = _flatten_pad(x)
     _, bn, bk = pick_blocks(x2.shape[0], k, n, qt.bits, qt.group_size)
     y = qmatmul_pallas(
         x2, qt.qweight, qt.scale, qt.zero, bits=qt.bits,
@@ -97,11 +136,22 @@ def flash_mha(q, k, v, causal=True, window=0, interpret=None,
 @functools.partial(jax.jit, static_argnames=("s", "out_dtype", "interpret"))
 def qalora_matmul(x, qt: QuantizedLinear, p: QALoRAParams, s: float = 1.0,
                   out_dtype=None, interpret=None):
-    """Fused y = x @ dequant(qt) + s * pool_sum(x) @ A @ B."""
+    """Fused y = x @ dequant(qt) + s * pool_sum(x) @ A @ B.  Small-M calls
+    (decode) dispatch to the fused GEMV kernel automatically."""
     interpret = _default_interpret() if interpret is None else interpret
-    x2, lead, m, bm = _flatten_pad(x)
     k, n = qt.d_in, qt.d_out
-    _, bn, bk = pick_blocks(x2.shape[0], k, n, qt.bits, qt.group_size)
+    rank = p.a.shape[1]
+    lead, m, use_gemv = _dispatch(x)
+    if use_gemv:
+        _, bn, bk = pick_blocks(m, k, n, qt.bits, qt.group_size, rank)
+        y = qalora_matvec_pallas(
+            x.reshape(m, k), qt.qweight, qt.scale, qt.zero, p.a, p.b,
+            s=float(s), bits=qt.bits, group_size=qt.group_size,
+            block_n=bn, block_k=bk,
+            out_dtype=out_dtype or x.dtype, interpret=interpret)
+        return y.reshape(*lead, n)
+    x2, lead, m, bm = _flatten_pad(x)
+    _, bn, bk = pick_blocks(x2.shape[0], k, n, qt.bits, qt.group_size, rank)
     y = qalora_matmul_pallas(
         x2, qt.qweight, qt.scale, qt.zero, p.a, p.b, s=float(s),
         bits=qt.bits, group_size=qt.group_size,

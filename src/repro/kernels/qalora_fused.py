@@ -68,6 +68,9 @@ def qalora_matmul_pallas(x, qweight, scale, zero, a, b, *, s: float,
     n = qweight.shape[1]
     rank = a.shape[1]
     cpb = codes_per_byte(bits)
+    assert m % block_m == 0 and k_dim % block_k == 0 and n % block_n == 0, \
+        (m, k_dim, n, block_m, block_n, block_k)
+    assert block_k % group_size == 0 and block_k % cpb == 0, (block_k, group_size, cpb)
     n_k = k_dim // block_k
     grid = (m // block_m, n // block_n, n_k)
     out_dtype = out_dtype or x.dtype

@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: small-M fused dequant GEMV  y = x @ dequant(W_q).
+
+Decode-shape specialization of :mod:`repro.kernels.qmatmul` (DESIGN: the
+serve hot path).  At M <= 8 the matmul grid would still tile M to an
+MXU-aligned block — padding a single decode token up to 128 rows and
+burning ~128x the MXU work for the same HBM traffic.  Here the whole
+activation strip [m, bk] rides in VMEM, the grid runs over (N, K) only,
+and the [bk, bn] dequantized weight tile is contracted against all m rows
+at once: the kernel stays bandwidth-bound on the packed INT-N weight
+stream, which is the QA-LoRA deployment win (paper Sec. 3.2 / App. B).
+
+A fused QA-LoRA variant (`qalora_matvec_pallas`) carries the group-pooled
+rank-r adapter epilogue in a second tiny VMEM scratch, mirroring
+`qalora_fused.py`: pool_sum(x) @ A accumulates across K steps and the
+`@ B` epilogue lands once per N tile on the last K step.
+
+Grid = (N/bn, K/bk), K innermost; f32 accumulation in VMEM scratch.
+Constraints (asserted below, so a stale/hand-edited autotune cache entry
+fails loudly instead of silently dropping K/N tail blocks): bk | K,
+bn | N, group_size | bk, codes_per_byte | bk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import codes_per_byte
+
+from .qmatmul import _dequant_block
+
+# Above this M the padded-matmul path wins (MXU utilization catches up);
+# below it the GEMV grid avoids the pad-to-block_m waste entirely.
+GEMV_MAX_M = 8
+
+
+def _qmatvec_kernel(x_ref, qw_ref, scale_ref, zero_ref, o_ref, acc_ref, *,
+                    bits: int, group_size: int, n_k: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bk = x_ref.shape[-1]
+    w = _dequant_block(qw_ref[...], scale_ref[...], zero_ref[...],
+                       bits, bk, group_size, dtype=x_ref.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def qmatvec_pallas(x, qweight, scale, zero, *, bits: int, group_size: int,
+                   block_n: int, block_k: int,
+                   out_dtype=None, interpret: bool = False):
+    """Raw pallas_call; use :mod:`repro.kernels.ops` for the dispatching
+    wrapper.  ``x: [m, K]`` with m <= GEMV_MAX_M (no M tiling)."""
+    m, k_dim = x.shape
+    n = qweight.shape[1]
+    assert m <= GEMV_MAX_M, (m, GEMV_MAX_M)
+    cpb = codes_per_byte(bits)
+    assert k_dim % block_k == 0 and n % block_n == 0, (k_dim, n, block_k, block_n)
+    assert block_k % group_size == 0 and block_k % cpb == 0, (block_k, group_size, cpb)
+    n_k = k_dim // block_k
+    grid = (n // block_n, n_k)
+    out_dtype = out_dtype or x.dtype
+
+    kernel = functools.partial(
+        _qmatvec_kernel, bits=bits, group_size=group_size, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda j, k: (0, k)),
+            pl.BlockSpec((block_k // cpb, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, qweight, scale, zero)
+
+
+def _qalora_matvec_kernel(x_ref, qw_ref, scale_ref, zero_ref, a_ref, b_ref,
+                          o_ref, acc_ref, lacc_ref, *, bits: int,
+                          group_size: int, n_k: int, s: float):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lacc_ref[...] = jnp.zeros_like(lacc_ref)
+
+    x = x_ref[...]
+    m, bk = x.shape
+    w = _dequant_block(qw_ref[...], scale_ref[...], zero_ref[...],
+                       bits, bk, group_size, dtype=x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # adapter: pool x over quantization groups, contract with A's K-slice
+    pooled = x.reshape(m, bk // group_size, group_size).sum(axis=-1)
+    lacc_ref[...] += jax.lax.dot_general(
+        pooled, a_ref[...].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        adapter = jax.lax.dot_general(
+            lacc_ref[...].astype(b_ref.dtype), b_ref[...],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + s * adapter).astype(o_ref.dtype)
+
+
+def qalora_matvec_pallas(x, qweight, scale, zero, a, b, *, s: float,
+                         bits: int, group_size: int,
+                         block_n: int, block_k: int,
+                         out_dtype=None, interpret: bool = False):
+    """Fused y = x @ dequant(W_q) + s * pool_sum(x) @ A @ B at decode M."""
+    m, k_dim = x.shape
+    n = qweight.shape[1]
+    assert m <= GEMV_MAX_M, (m, GEMV_MAX_M)
+    rank = a.shape[1]
+    cpb = codes_per_byte(bits)
+    assert k_dim % block_k == 0 and n % block_n == 0, (k_dim, n, block_k, block_n)
+    assert block_k % group_size == 0 and block_k % cpb == 0, (block_k, group_size, cpb)
+    n_k = k_dim // block_k
+    grid = (n // block_n, n_k)
+    out_dtype = out_dtype or x.dtype
+
+    kernel = functools.partial(
+        _qalora_matvec_kernel, bits=bits, group_size=group_size, n_k=n_k, s=s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda j, k: (0, k)),
+            pl.BlockSpec((block_k // cpb, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, rank), lambda j, k: (k, 0)),
+            pl.BlockSpec((rank, block_n), lambda j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, block_n), jnp.float32),
+            pltpu.VMEM((m, rank), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, qweight, scale, zero, a, b)

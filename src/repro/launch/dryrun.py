@@ -29,8 +29,14 @@ import jax
 import jax.numpy as jnp
 
 
-def build_step(arch: str, cell_name: str, mesh):
-    """Returns (lower_fn, abstract_args) for the cell's step function."""
+def build_step(arch: str, cell_name: str, mesh, gen_len: int = 0):
+    """Returns (lower_fn, abstract_args) for the cell's step function.
+
+    ``gen_len > 0`` builds decode cells as the serve scan-generate program
+    (`steps.make_generate_step`) instead of a single decode step — the
+    same whole-generation program `launch.serve` runs, proved to lower
+    and compile under the production shardings.
+    """
     import repro.configs as C
     from repro.configs.base import SHAPES
     from repro.configs.shapes import input_specs
@@ -52,7 +58,14 @@ def build_step(arch: str, cell_name: str, mesh):
         params = S.abstract_params(lm)
         jitted, bspec = jit_for(kw["batch"])
         args = (params, kw["batch"])
-    else:  # decode
+    elif gen_len:  # decode, whole scan-generation program
+        jit_for, pspec = S.make_generate_step(lm, mesh, gen_len)
+        params = S.abstract_params(lm)
+        jitted, cspec = jit_for(kw["cache"])
+        b = kw["tokens"].shape[0]
+        logits = jax.ShapeDtypeStruct((b, cfg.vocab), jnp.float32)
+        args = (params, kw["cache"], logits)
+    else:  # decode, single step
         jit_for, pspec = S.make_decode_step(lm, mesh)
         params = S.abstract_params(lm)
         jitted, cspec = jit_for(kw["cache"])
@@ -65,10 +78,16 @@ COLLECTIVE_RE = re.compile(
 
 
 def run_cell(arch: str, cell_name: str, mesh_kind: str, outdir: str,
-             save_hlo: bool = False, force: bool = False) -> dict:
+             save_hlo: bool = False, force: bool = False,
+             gen_len: int = 0) -> dict:
+    from repro.configs.base import SHAPES
     from repro.launch.mesh import make_production_mesh
 
+    if SHAPES[cell_name].kind != "decode":
+        gen_len = 0  # only decode cells have a generation program
     tag = f"{arch}__{cell_name}__{mesh_kind}"
+    if gen_len:
+        tag += f"__gen{gen_len}"
     path = os.path.join(outdir, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -77,7 +96,7 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, outdir: str,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     with mesh:
-        jitted, args = build_step(arch, cell_name, mesh)
+        jitted, args = build_step(arch, cell_name, mesh, gen_len=gen_len)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -85,6 +104,8 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, outdir: str,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older jax: one dict per device program
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
 
     rec = {
@@ -125,6 +146,9 @@ def main(argv=None):
     ap.add_argument("--outdir", default="experiments/dryrun")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--gen-len", type=int, default=0,
+                    help="decode cells: compile the whole scan-generation "
+                         "program (serve path) instead of one decode step")
     args = ap.parse_args(argv)
 
     import repro.configs as C
@@ -142,7 +166,8 @@ def main(argv=None):
         for mk in meshes:
             try:
                 run_cell(arch, cell, mk, args.outdir,
-                         save_hlo=args.save_hlo, force=args.force)
+                         save_hlo=args.save_hlo, force=args.force,
+                         gen_len=args.gen_len)
             except Exception as e:
                 failures.append((arch, cell, mk, repr(e)))
                 print(f"[dryrun] FAIL {arch}__{cell}__{mk}: {e}")

@@ -82,14 +82,44 @@ def make_train_step(lm: LM, mesh: Mesh, opt_cfg: Optional[AdamWConfig] = None,
     return jit_for, (tspec, fspec, ospec)
 
 
-def make_prefill_step(lm: LM, mesh: Mesh):
-    pspec = param_specs(abstract_params(lm), mesh)
+def make_prefill_step(lm: LM, mesh: Mesh, params_abstract=None):
+    """``params_abstract`` overrides the default (adapter-bearing) param
+    tree — pass the merged tree when serving a deployed model."""
+    pspec = param_specs(params_abstract or abstract_params(lm), mesh)
     sh = lambda t: spec_to_sharding(t, mesh)
 
     def jit_for(batch_abstract):
         bspec = batch_spec_tree(batch_abstract, mesh)
         return jax.jit(lm.prefill,
                        in_shardings=(sh(pspec), sh(bspec))), bspec
+
+    return jit_for, pspec
+
+
+def make_generate_step(lm: LM, mesh: Mesh, gen_len: int, donate: bool = True,
+                       params_abstract=None):
+    """Whole-generation step: ``lax.scan`` over ``lm.decode_step``.
+
+    One compiled program emits ``gen_len`` greedy tokens from the prefill
+    logits — no per-token dispatch or host sync.  Serve and dryrun both
+    build their decode path through this factory.  ``params_abstract``
+    overrides the default (adapter-bearing) param tree — pass the merged
+    tree when serving a deployed model.
+    """
+    pspec = param_specs(params_abstract or abstract_params(lm), mesh)
+    sh = lambda t: spec_to_sharding(t, mesh)
+
+    def generate(params, cache, logits):
+        return lm.generate(params, cache, logits, gen_len)
+
+    def jit_for(cache_abstract):
+        cspec = cache_spec_tree(cache_abstract, mesh)
+        return jax.jit(
+            generate,
+            in_shardings=(sh(pspec), sh(cspec), None),
+            out_shardings=(None, sh(cspec)),
+            donate_argnums=(1,) if donate else (),
+        ), cspec
 
     return jit_for, pspec
 

@@ -671,3 +671,50 @@ class LM:
         h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
         logits = self._logits(params, h)[:, 0]
         return logits, {"layers": layers, "len": cur + 1}
+
+    # ---------------- serving: prefill + scan decode ----------------
+
+    def merge_prefill_cache(self, prefill_cache, decode_cache):
+        """Embed a :meth:`prefill` cache into a full-capacity decode cache.
+
+        ``prefill`` materializes per-layer caches sized to the prompt;
+        :meth:`init_cache` allocates them at max generation length.  Leaves
+        with identical shapes carry over (recurrent states, lengths); any
+        leaf that is smaller along some axes (KV / compressed-KV seq dims)
+        is zero-padded up to the decode layout, which matches what
+        ``init_cache`` would have held there.  Family-agnostic: works for
+        gqa / mla / hybrid / rwkv / encdec alike.
+        """
+        def pad(p, c):
+            p = p.astype(c.dtype)
+            if p.shape == c.shape:
+                return p
+            assert p.ndim == c.ndim, (p.shape, c.shape)
+            widths = [(0, cs - ps) for ps, cs in zip(p.shape, c.shape)]
+            assert all(w >= 0 for _, w in widths), (p.shape, c.shape)
+            return jnp.pad(p, widths)
+
+        return jax.tree.map(pad, prefill_cache, decode_cache)
+
+    def generate(self, params, cache, logits, gen_len: int):
+        """Greedy scan decode: one compiled program for the whole generation.
+
+        ``logits`` are the last-position logits from :meth:`prefill` (or a
+        prior :meth:`decode_step`); token ``t+1`` = argmax of step ``t``'s
+        logits, so the sequence is token-identical to a per-step Python
+        loop — without ``gen_len`` dispatches and host syncs.  Returns
+        (tokens [B, gen_len], final cache).
+        """
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)  # [B]
+
+        def body(carry, _):
+            cache, tok = carry
+            lg, cache = self.decode_step(params, cache, tok[:, None])
+            return (cache, jnp.argmax(lg, -1).astype(jnp.int32)), tok
+
+        (cache, last), toks = jax.lax.scan(
+            body, (cache, tok0), None, length=max(gen_len - 1, 0))
+        if gen_len <= 0:
+            return jnp.zeros((tok0.shape[0], 0), jnp.int32), cache
+        toks = jnp.concatenate([toks, last[None]], axis=0)
+        return toks.swapaxes(0, 1), cache

@@ -136,14 +136,33 @@ def _opcode(rhs: str) -> str:
     return m.group(1) if m else ""
 
 
-def _operands(rhs: str) -> List[str]:
+def _operand_tokens(rhs: str) -> List[str]:
+    """Top-level comma split of the operand list (commas inside [] / {} are
+    shape dims, not separators — newer HLO printers inline operand types)."""
     m = re.search(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", rhs[len(_result_type(rhs)):])
     if not m:
         return []
+    toks, depth, cur = [], 0, []
+    for ch in m.group(1):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            toks.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        toks.append("".join(cur).strip())
+    return [t for t in toks if t]
+
+
+def _operands(rhs: str) -> List[str]:
     ops = []
-    for tok in m.group(1).split(","):
-        tok = tok.strip()
-        tm = re.match(r"%?([\w.\-]+)", tok)
+    for tok in _operand_tokens(rhs):
+        # typed form: "f32[4,16,32]{2,1,0} %Arg_0.1"; bare form: "%Arg_0.1"
+        tm = re.search(r"%([\w.\-]+)\s*$", tok) or re.match(r"%?([\w.\-]+)", tok)
         if tm:
             ops.append(tm.group(1))
     return ops
@@ -176,12 +195,16 @@ def _dot_flops(mod: _Module, comp: str, line: str, shapes: Dict[str, str]) -> fl
     for d in rdims:
         numel *= d
     ops = _operands(rhs)
+    toks = _operand_tokens(rhs)
     # contraction size from lhs shape and contracting dims
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     csize = 1
     if m and ops:
-        lhs_rhs = shapes.get(ops[0], "")
-        lsh = _first_shape(lhs_rhs)
+        # prefer the inline operand type (newer printers); else look the
+        # operand's defining instruction up
+        lsh = _first_shape(toks[0]) if toks else None
+        if lsh is None:
+            lsh = _first_shape(shapes.get(ops[0], ""))
         if lsh:
             for ix in (int(i) for i in m.group(1).split(",") if i):
                 if ix < len(lsh[1]):

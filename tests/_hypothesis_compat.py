@@ -1,0 +1,64 @@
+"""Minimal deterministic stand-in for `hypothesis` (used when the real
+package is not installed, so the property tests keep running from a clean
+checkout).
+
+Only the surface the test-suite uses is implemented: ``@settings`` /
+``@given`` with ``sampled_from`` / ``floats`` / ``integers`` strategies.
+Examples are drawn from a fixed-seed PRNG, so the fallback is a
+repeatable randomized sweep — no shrinking, no example database.  With
+real hypothesis installed (see requirements-dev.txt) the tests import it
+instead and get the full machinery.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # rng -> value
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def floats(min_value, max_value, **_):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def integers(min_value, max_value, **_):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(
+    sampled_from=sampled_from, floats=floats, integers=integers)
+
+_DEFAULT_EXAMPLES = 20
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(getattr(wrapper, "_max_examples",
+                                   _DEFAULT_EXAMPLES)):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+        # NOT functools.wraps: pytest must see a zero-arg signature (the
+        # drawn params would otherwise look like missing fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+    return deco
+
+
+def settings(deadline=None, max_examples=_DEFAULT_EXAMPLES, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

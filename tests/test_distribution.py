@@ -13,8 +13,11 @@ def _run(src: str) -> str:
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(src)],
         capture_output=True, text=True, timeout=420,
+        # JAX_PLATFORMS=cpu is load-bearing: without it jax probes the TPU
+        # runtime (libtpu ships in this image) and hangs on its lockfile —
+        # these tests are about the forced multi-device CPU platform.
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+             "HOME": "/tmp", "JAX_PLATFORMS": "cpu"},
         cwd=".",
     )
     assert out.returncode == 0, out.stderr[-3000:]

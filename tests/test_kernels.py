@@ -77,3 +77,88 @@ def test_block_picker_constraints():
                 bm, bn, bk = pick_blocks(128, k, n, bits, 32)
                 assert k % bk == 0 and n % bn == 0
                 assert bk % 32 == 0 and bk % codes_per_byte(bits) == 0
+
+
+# ---------------------------------------------------------------------------
+# decode GEMV path (M <= GEMV_MAX_M dispatches to kernels/qmatvec.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("m", [1, 2, 8])
+def test_qmatvec_matches_qmatmul_and_ref(bits, m):
+    """GEMV path == matmul kernel == dense reference at decode M."""
+    from repro.kernels.qmatmul import qmatmul_pallas
+
+    k, n, g = 128, 96, 32
+    x, qt, _ = _setup(bits, m, k, n, g, jnp.float32)
+    y = qmatmul(x, qt, interpret=True)  # dispatches to qmatvec (m <= 8)
+    yr = qmatmul_ref(x, qt)
+    ym = qmatmul_pallas(x, qt.qweight, qt.scale, qt.zero, bits=bits,
+                        group_size=g, block_m=m, block_n=48, block_k=64,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ym), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("m", [1, 2, 8])
+def test_qalora_matvec_fused_matches_ref(bits, m):
+    k, n, g = 128, 96, 32
+    x, qt, p = _setup(bits, m, k, n, g, jnp.float32)
+    y = qalora_matmul(x, qt, p, s=0.7, interpret=True)  # fused GEMV path
+    yr = qalora_matmul_ref(x, qt, p, 0.7)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+def test_gemv_dispatch_threshold():
+    """M <= GEMV_MAX_M must take the no-M-tiling GEMV kernel; above it the
+    tiled matmul. Both agree with the oracle at the boundary."""
+    from repro.kernels import GEMV_MAX_M
+    assert GEMV_MAX_M == 8
+    for m in (GEMV_MAX_M, GEMV_MAX_M + 1):
+        x, qt, p = _setup(4, m, 128, 96, 32, jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(qalora_matmul(x, qt, p, s=1.0, interpret=True)),
+            np.asarray(qalora_matmul_ref(x, qt, p, 1.0)),
+            rtol=2e-4, atol=2e-4)
+
+
+def test_qmatvec_decode_token_shape():
+    """[B, 1, K] decode activations flatten to M=B and round-trip."""
+    x, qt, p = _setup(4, 4, 128, 64, 32, jnp.float32)
+    x3 = jax.random.normal(jax.random.PRNGKey(6), (4, 1, 128))
+    y = qalora_matmul(x3, qt, p, s=0.5, interpret=True)
+    yr = qalora_matmul_ref(x3.reshape(4, 128), qt, p, 0.5).reshape(4, 1, 64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    from repro.kernels import autotune, pick_blocks, heuristic_blocks
+
+    path = tmp_path / "autotune_cache.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    autotune.clear_cache(persist=False)
+    m, k, n, bits, g = 1, 256, 128, 4, 32
+    # no cache, no measure -> heuristic
+    assert pick_blocks(m, k, n, bits, g) == heuristic_blocks(m, k, n, bits, g)
+    # measured result is persisted and then served from the cache
+    best = autotune.measure_qmatmul(m, k, n, bits, g, reps=1)
+    assert k % best[2] == 0 and n % best[1] == 0
+    assert path.exists()
+    assert pick_blocks(m, k, n, bits, g) == best
+    # cache survives a reload from disk
+    autotune.clear_cache(persist=False)
+    autotune._cache = None
+    assert pick_blocks(m, k, n, bits, g) == best
+    autotune.clear_cache()
+    assert not path.exists()
+    assert pick_blocks(m, k, n, bits, g) == heuristic_blocks(m, k, n, bits, g)
+    monkeypatch.delenv(autotune.CACHE_ENV)
+    autotune.clear_cache(persist=False)
+    autotune._cache = None

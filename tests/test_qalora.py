@@ -13,7 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback sweep (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (quantize, dequantize, QALoRAParams, init_qalora,
                         qalora_forward, merge, group_pool, adapter_delta,

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback sweep (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (quantize, dequantize, pack, unpack, gptq_quantize_from_calibration,
                         nf4_quantize, nf4_dequantize)
