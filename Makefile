@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke verify dev-deps
+.PHONY: test smoke lint verify dev-deps
 
 dev-deps:
 	pip install -r requirements-dev.txt
@@ -14,4 +14,9 @@ test:
 smoke:
 	$(PY) -m benchmarks.run --only kernels,decode
 
-verify: test smoke
+# static checks (ruff.toml); strict when ruff is installed
+lint:
+	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
+	else echo "[lint] ruff not installed; run 'make dev-deps'"; fi
+
+verify: lint test smoke

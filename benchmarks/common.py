@@ -24,7 +24,7 @@ import numpy as np
 import repro.configs as C
 from repro.models import LM
 from repro.models.common import QuantPolicy, rmsnorm
-from repro.core import convert_tree, quantize
+from repro.core import convert_tree
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, split_params,
                          merge_params, count_params)
 from repro.data import make_stream
@@ -147,18 +147,7 @@ def merge_for_deploy(params, pol):
 
 
 def ptq_tree(params_fp_merged, bits, group):
-    """Post-training quantize every fp linear (the lossy QLoRA+PTQ step)."""
-    def walk(p, parent=""):
-        if isinstance(p, dict):
-            if set(p) == {"w"} and getattr(p["w"], "ndim", 0) >= 2 \
-                    and parent not in ("router", "mtp_proj"):
-                w = p["w"]
-                if w.shape[-2] % group == 0:
-                    qfn = lambda w_: quantize(w_, bits, group)
-                    for _ in w.shape[:-2]:
-                        qfn = jax.vmap(qfn)
-                    return {"q": qfn(w.astype(jnp.float32))}
-                return p
-            return {k: walk(v, k) for k, v in p.items()}
-        return p
-    return walk(params_fp_merged)
+    """Post-training quantize every fp linear (the lossy QLoRA+PTQ step):
+    generic conversion to the bare-quantized 'intq' scheme."""
+    pol = QuantPolicy(mode="intq", bits=bits, group_size=group)
+    return convert_tree(params_fp_merged, pol)

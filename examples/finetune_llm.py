@@ -3,9 +3,11 @@
     PYTHONPATH=src python examples/finetune_llm.py
 
 1. "Pretrain" a small llama-proxy LM (stands in for the public LLaMA ckpt)
-2. Quantize the base to INT4 (group 32 scaled down) + attach QA-LoRA
+2. Convert under a per-layer PolicyTree — INT4 QA-LoRA everywhere, INT8
+   attention output projections, fp lm_head (the LQ-LoRA-style
+   mixed-precision configuration)
 3. Fine-tune on an instruction dataset (with checkpointing + restart)
-4. Merge and compare the deployed INT4 model vs the fine-tuned one
+4. Merge and compare the deployed mixed-INT model vs the fine-tuned one
 """
 
 import os
@@ -17,7 +19,7 @@ import numpy as np
 
 import repro.configs as C
 from repro.models import LM
-from repro.models.common import QuantPolicy
+from repro.models.common import PolicyTree, QuantPolicy
 from repro.core import convert_tree
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, split_params,
                          merge_params, count_params)
@@ -50,14 +52,17 @@ for i in range(300):
         params, opt, {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)})
 print(f"[1] pretrained base: loss={float(loss):.3f}")
 
-# 2. quantize + attach ----------------------------------------------------
-pol = QuantPolicy(mode="qalora", bits=4, group_size=16, rank=8,
-                  dtype=jnp.float32)
+# 2. quantize + attach under a per-layer policy ---------------------------
+base = QuantPolicy(mode="qalora", bits=4, group_size=16, rank=8,
+                   dtype=jnp.float32)
+pol = PolicyTree.parse("*=int4,*/attn/wo=int8,lm_head=fp", base=base)
 qparams = convert_tree(params, pol, jax.random.PRNGKey(1))
 cfg = cfg_fp.scaled(quant=pol)
 lmq = LM(cfg)
 trainable, frozen = split_params(qparams)
-print(f"[2] INT4 base + adapters: trainable={count_params(trainable):,} "
+wo = qparams["blocks"]["attn"]["wo"]
+print(f"[2] mixed-precision base + adapters: body int4, attn/wo "
+      f"int{wo['q'].bits}, lm_head fp; trainable={count_params(trainable):,} "
       f"({count_params(trainable) / max(count_params(qparams),1):.2%} of params)")
 
 # 3. fine-tune on an unseen dataset, with checkpoint/restart --------------
@@ -86,9 +91,11 @@ ckpt.wait()
 print(f"[3] fine-tuned: loss={float(loss):.3f}, "
       f"checkpoints at steps {ckpt.all_steps()}")
 
-# 4. merge for deployment -------------------------------------------------
+# 4. merge for deployment (each layer stays at ITS bit width) -------------
 tuned = merge_params(trainable, frozen)
-deployed = merge_model(tuned, pol)
+deployed = merge_model(tuned)
+assert deployed["blocks"]["attn"]["wo"]["q"].bits == 8
+assert deployed["blocks"]["attn"]["wq"]["q"].bits == 4
 toks, labs = ft.next_batch()
 batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
 l_tuned, _ = jax.jit(lmq.loss)(tuned, batch)

@@ -1,48 +1,62 @@
-"""Quickstart: QA-LoRA on a single linear layer in ~40 lines.
+"""Quickstart: QA-LoRA on a single linear layer in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the three moves of the paper:
-  1. group-wise quantize a pretrained weight (INT4, group 32);
-  2. fine-tune only the group-pooled adapter (A: [L, r], B: [r, D_out]);
-  3. merge EXACTLY back into the quantized layer (zeros update only).
+Shows the three moves of the paper through the LinearScheme API:
+  1. init a quantized linear (INT4, group 32) + group-pooled adapter
+     via the "qalora" registered scheme;
+  2. fine-tune only the adapter (the scheme's trainable state);
+  3. merge EXACTLY back into a quantized ("intq") layer — zeros update
+     only, integer codes and scales untouched.
+
+Schemes are pluggable (`repro.core.schemes.register_scheme`) and
+policies are per-layer (`PolicyTree.parse("*=int4,*/attn/wo=int8")`) —
+see examples/finetune_llm.py for the whole-model workflow.
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (quantize, dequantize, init_qalora, qalora_forward,
-                        merge, QALoRAParams)
+from repro.core import schemes
+from repro.core.schemes import LinearParams, QuantPolicy
 
 key = jax.random.PRNGKey(0)
-D_IN, D_OUT, BITS, GROUP, RANK, S = 256, 128, 4, 32, 8, 2.0
+D_IN, D_OUT = 256, 128
+POL = QuantPolicy(mode="qalora", bits=4, group_size=32, rank=8, s=2.0)
 
-# 1. quantize the "pretrained" weight ------------------------------------
-w = jax.random.normal(key, (D_IN, D_OUT)) / 16.0
-qt = quantize(w, BITS, GROUP)
-print(f"quantized: {qt.qweight.shape} uint8 (packed int{BITS}), "
-      f"{qt.n_groups} groups/column")
+# 1. quantized base + group-pooled adapter --------------------------------
+layer = schemes.linear_init(key, D_IN, D_OUT, POL)
+qt = layer["q"]
+print(f"scheme={layer.scheme}: {qt.qweight.shape} uint8 (packed int{qt.bits}), "
+      f"{qt.n_groups} groups/column, adapter A {layer['ad'].a.shape}")
 
 # 2. fine-tune the adapter on a toy regression ---------------------------
-adapter = init_qalora(key, qt.n_groups, RANK, D_OUT)
 x = jax.random.normal(jax.random.fold_in(key, 1), (512, D_IN))
-target = jnp.tanh(x @ w * 1.1)  # pretend "task" output
+target = jnp.tanh(x @ schemes.dense_view(layer) * 1.1)  # pretend "task"
 
 
-def loss_fn(p):
-    return jnp.mean((qalora_forward(x, qt, p, S) - target) ** 2)
+def loss_fn(ad):
+    p = LinearParams(data={"q": qt, "ad": ad}, scheme=layer.scheme,
+                     policy=layer.policy)
+    return jnp.mean((schemes.linear_apply(p, x) - target) ** 2)
 
 
+adapter = layer["ad"]
 lr = 0.05
 for i in range(200):
     g = jax.grad(loss_fn)(adapter)
-    adapter = QALoRAParams(a=adapter.a - lr * g.a, b=adapter.b - lr * g.b)
+    adapter = jax.tree.map(lambda a, g_: a - lr * g_, adapter, g)
     if i % 50 == 0:
         print(f"step {i:3d} loss {loss_fn(adapter):.5f}")
 
+tuned = LinearParams(data={"q": qt, "ad": adapter}, scheme=layer.scheme,
+                     policy=layer.policy)
+
 # 3. merge: still INT4, zero accuracy loss --------------------------------
-merged = merge(qt, adapter, S)
-err = jnp.max(jnp.abs(qalora_forward(x, qt, adapter, S) - x @ dequantize(merged)))
-print(f"merged model is still int{merged.bits}; |adapter - merged| = {err:.2e}")
-assert err < 1e-3
+merged = schemes.merge_linear(tuned)
+err = jnp.max(jnp.abs(schemes.linear_apply(tuned, x)
+                      - schemes.linear_apply(merged, x)))
+print(f"merged scheme={merged.scheme} (int{merged['q'].bits}); "
+      f"|adapter - merged| = {err:.2e}")
+assert merged.scheme == "intq" and err < 1e-3
 print("OK: fine-tuned weights folded into the quantized model exactly.")

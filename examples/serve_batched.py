@@ -1,12 +1,16 @@
-"""Batched INT4 serving of a merged QA-LoRA model (deployment-side demo).
+"""Batched serving of a merged QA-LoRA model with a per-layer policy.
 
     PYTHONPATH=src python examples/serve_batched.py
 
-Uses the serve driver: batch of requests, token-by-token decode with a KV
-cache, --verify asserts the merged model matches the adapter model.
+Uses the serve driver with a mixed-precision PolicyTree: INT4 body,
+INT8 attention output projections, fp lm_head.  After `merge` each layer
+stays at ITS bit width (int4/int8 codes + scales unchanged, zeros
+updated) and --verify asserts the merged model matches the adapter
+model token-for-token.
 """
 
 from repro.launch.serve import main
 
 main(["--arch", "gemma3-1b", "--reduced", "--requests", "4",
-      "--prompt-len", "12", "--gen-len", "6", "--verify"])
+      "--prompt-len", "12", "--gen-len", "6", "--verify",
+      "--policy", "*=int4,*/attn/wo=int8,lm_head=fp"])

@@ -3,11 +3,11 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.models.common import QuantPolicy
+from repro.core.schemes import PolicyTree, QuantPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,8 +57,8 @@ class ArchConfig:
     # frontend stub ("vision" | "audio" | None): precomputed embeddings input
     frontend: Optional[str] = None
     frontend_len: int = 256               # patches/frames prepended to the LM
-    # policy
-    quant: QuantPolicy = QuantPolicy()
+    # policy: uniform QuantPolicy or per-layer PolicyTree
+    quant: Union[QuantPolicy, PolicyTree] = QuantPolicy()
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     remat: bool = True

@@ -31,3 +31,25 @@ from .lora import (  # noqa: F401
 from .gptq import gptq_quantize, gptq_quantize_from_calibration  # noqa: F401
 from .convert import convert_tree  # noqa: F401
 from .nf4 import NF4Tensor, nf4_quantize, nf4_dequantize  # noqa: F401
+from .schemes import (  # noqa: F401
+    FP,
+    LinearParams,
+    LinearScheme,
+    PolicyTree,
+    QuantPolicy,
+    dense_linear,
+    dense_view,
+    from_dense_linear,
+    get_scheme,
+    is_linear,
+    linear_apply,
+    linear_init,
+    map_linears,
+    merge_linear,
+    merge_tree,
+    register_scheme,
+    registered_schemes,
+    resolve_path,
+    trainable_mask,
+    tree_flops_bytes,
+)

@@ -1,85 +1,18 @@
-"""Checkpoint conversion: pretrained fp model -> QA-LoRA (or baseline) form.
+"""Checkpoint conversion: pretrained fp model -> QA-LoRA (or any scheme).
 
 This is the paper's actual workflow: start from a *pretrained* LLM,
-quantize the base (RTN or GPTQ), attach fresh adapters, fine-tune.  The
-converter walks a model pytree produced under ``mode="fp"`` and rewrites
-every linear ``{"w": [D_in, D_out]}`` into the target mode's storage:
+quantize the base (RTN or GPTQ), attach fresh adapters, fine-tune.
 
-  qalora: {"q": QuantizedLinear, "ad": QALoRAParams}
-  qlora : {"nf4": NF4Tensor,     "ad": LoRAParams}
-  lora  : {"w": w,               "ad": LoRAParams}
-
-Routers and any non-2D/group-indivisible matrices stay fp (same rule as
-init).  Layer-stacked linears (leading scan dims) are handled by vmapping
-the quantizer over the stack.
+The implementation is the generic ``from_dense(dense_view(p))`` walk in
+:func:`repro.core.schemes.convert_tree`: every linear's effective dense
+weight is re-stored under the target policy's scheme, so conversion
+works between ANY registered scheme pair — including per-layer
+:class:`~repro.core.schemes.PolicyTree` targets (LQ-LoRA-style mixed
+precision).  Exempt layers (routers, mtp_proj) and group-indivisible
+matrices keep fp storage; layer-stacked linears (leading scan/expert
+dims) are quantized slice-wise with a shared adapter init.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
-
-import jax
-import jax.numpy as jnp
-
-from .quant import quantize
-from .nf4 import nf4_quantize
-from .qalora import init_qalora
-from .lora import init_lora
-
-_SKIP_PARENTS = {"router", "mtp_proj"}
-
-
-def convert_tree(params, pol, key=None, quantizer: Optional[Callable] = None):
-    """Rewrite an fp params tree into `pol.mode` storage. `quantizer`
-    overrides RTN for the qalora base (e.g. a GPTQ closure)."""
-    if pol.mode == "fp":
-        return params
-    key = jax.random.PRNGKey(0) if key is None else key
-    counter = [0]
-
-    def fresh_key():
-        counter[0] += 1
-        return jax.random.fold_in(key, counter[0])
-
-    def convert_linear(w):
-        # w may carry leading stack dims: [*, D_in, D_out]
-        lead = w.shape[:-2]
-        d_in, d_out = w.shape[-2:]
-        if d_in % pol.group_size != 0:
-            return {"w": w}
-        k = fresh_key()
-        if pol.mode == "qalora":
-            qfn = quantizer or (lambda w_: quantize(
-                w_, pol.bits, pol.group_size, scale_dtype=pol.scale_dtype))
-            for _ in lead:
-                qfn = jax.vmap(qfn)
-            qt = qfn(w.astype(jnp.float32))
-            ad = init_qalora(k, d_in // pol.group_size, pol.rank, d_out, pol.dtype)
-            ad = jax.tree.map(
-                lambda a: jnp.broadcast_to(a, lead + a.shape) if lead else a, ad)
-            return {"q": qt, "ad": ad}
-        if pol.mode == "qlora":
-            qfn = nf4_quantize
-            for _ in lead:
-                qfn = jax.vmap(qfn)
-            nf4 = qfn(w.astype(jnp.float32))
-            ad = init_lora(k, d_in, pol.rank, d_out, pol.dtype)
-            ad = jax.tree.map(
-                lambda a: jnp.broadcast_to(a, lead + a.shape) if lead else a, ad)
-            return {"nf4": nf4, "ad": ad}
-        # lora
-        ad = init_lora(k, d_in, pol.rank, d_out, pol.dtype)
-        ad = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, lead + a.shape) if lead else a, ad)
-        return {"w": w, "ad": ad}
-
-    def walk(p, parent=""):
-        if isinstance(p, dict):
-            if set(p) == {"w"} and hasattr(p["w"], "ndim") and p["w"].ndim >= 2 \
-                    and parent not in _SKIP_PARENTS:
-                return convert_linear(p["w"])
-            return {k: walk(v, k) for k, v in p.items()}
-        return p
-
-    return walk(params)
+from .schemes import convert_tree  # noqa: F401

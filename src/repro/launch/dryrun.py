@@ -29,13 +29,16 @@ import jax
 import jax.numpy as jnp
 
 
-def build_step(arch: str, cell_name: str, mesh, gen_len: int = 0):
+def build_step(arch: str, cell_name: str, mesh, gen_len: int = 0,
+               policy: str = "", reduced: bool = False):
     """Returns (lower_fn, abstract_args) for the cell's step function.
 
     ``gen_len > 0`` builds decode cells as the serve scan-generate program
     (`steps.make_generate_step`) instead of a single decode step — the
     same whole-generation program `launch.serve` runs, proved to lower
-    and compile under the production shardings.
+    and compile under the production shardings.  ``policy`` applies
+    per-layer PolicyTree rules (e.g. ``"*=int4,*/attn/wo=int8,lm_head=fp"``)
+    so mixed-precision deployments compile-check like uniform ones.
     """
     import repro.configs as C
     from repro.configs.base import SHAPES
@@ -43,7 +46,10 @@ def build_step(arch: str, cell_name: str, mesh, gen_len: int = 0):
     from repro.models.lm import LM
     from repro.launch import steps as S
 
-    cfg = C.get(arch)
+    cfg = C.reduced(arch) if reduced else C.get(arch)
+    if policy:
+        from repro.core.schemes import PolicyTree
+        cfg = cfg.scaled(quant=PolicyTree.parse(policy, base=cfg.quant.default))
     cell = SHAPES[cell_name]
     lm = LM(cfg)
     kind, kw = input_specs(cfg, cell)
@@ -79,7 +85,7 @@ COLLECTIVE_RE = re.compile(
 
 def run_cell(arch: str, cell_name: str, mesh_kind: str, outdir: str,
              save_hlo: bool = False, force: bool = False,
-             gen_len: int = 0) -> dict:
+             gen_len: int = 0, policy: str = "", reduced: bool = False) -> dict:
     from repro.configs.base import SHAPES
     from repro.launch.mesh import make_production_mesh
 
@@ -88,6 +94,12 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, outdir: str,
     tag = f"{arch}__{cell_name}__{mesh_kind}"
     if gen_len:
         tag += f"__gen{gen_len}"
+    if reduced:
+        tag += "__reduced"
+    if policy:
+        import hashlib
+        digest = hashlib.sha1(policy.encode()).hexdigest()[:8]
+        tag += "__pol" + re.sub(r"[^A-Za-z0-9]+", "-", policy)[:40] + "-" + digest
     path = os.path.join(outdir, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -96,7 +108,8 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, outdir: str,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     with mesh:
-        jitted, args = build_step(arch, cell_name, mesh, gen_len=gen_len)
+        jitted, args = build_step(arch, cell_name, mesh, gen_len=gen_len,
+                                  policy=policy, reduced=reduced)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -149,6 +162,11 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=0,
                     help="decode cells: compile the whole scan-generation "
                          "program (serve path) instead of one decode step")
+    ap.add_argument("--policy", default="",
+                    help='per-layer policy rules, e.g. '
+                         '"*=int4,*/attn/wo=int8,lm_head=fp"')
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CPU smoke) config sizes")
     args = ap.parse_args(argv)
 
     import repro.configs as C
@@ -167,7 +185,8 @@ def main(argv=None):
             try:
                 run_cell(arch, cell, mk, args.outdir,
                          save_hlo=args.save_hlo, force=args.force,
-                         gen_len=args.gen_len)
+                         gen_len=args.gen_len, policy=args.policy,
+                         reduced=args.reduced)
             except Exception as e:
                 failures.append((arch, cell, mk, repr(e)))
                 print(f"[dryrun] FAIL {arch}__{cell}__{mk}: {e}")

@@ -27,18 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def merge_model(params, pol):
-    """Merge every adapter into its quantized base (exact; Appendix B)."""
-    from repro.models.common import merge_linear
+def merge_model(params, pol=None):
+    """Merge every adapter into its quantized base (exact; Appendix B).
 
-    def walk(p):
-        if isinstance(p, dict) and ("ad" in p or "q" in p or "nf4" in p):
-            return merge_linear(p, pol)
-        if isinstance(p, dict):
-            return {k: walk(v) for k, v in p.items()}
-        return p
-
-    return walk(params)
+    Tag-driven walk over the scheme registry (``schemes.merge_tree``);
+    ``pol`` is only consulted for legacy untagged checkpoints."""
+    from repro.core.schemes import merge_tree
+    return merge_tree(params, pol=pol)
 
 
 def make_scan_generator(lm, mesh, params, batch_shape, gen_len: int,
@@ -135,13 +130,20 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--loop", action="store_true",
                     help="use the legacy per-token loop instead of scan")
+    ap.add_argument("--policy", default="",
+                    help='per-layer policy rules, e.g. '
+                         '"*=int4,*/attn/wo=int8,lm_head=fp"')
     args = ap.parse_args(argv)
 
     import repro.configs as C
+    from repro.core.schemes import PolicyTree
     from repro.launch.mesh import make_cpu_mesh
     from repro.models.lm import LM
 
     cfg = C.reduced(args.arch) if args.reduced else C.get(args.arch)
+    if args.policy:
+        cfg = cfg.scaled(quant=PolicyTree.parse(args.policy,
+                                                base=cfg.quant.default))
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     pol = cfg.quant

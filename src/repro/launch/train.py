@@ -36,6 +36,9 @@ def main(argv=None):
     ap.add_argument("--group-size", type=int, default=0, help="0 = config default")
     ap.add_argument("--mode", default="qalora",
                     choices=["qalora", "qlora", "lora", "fp"])
+    ap.add_argument("--policy", default="",
+                    help='per-layer policy rules overriding --mode, e.g. '
+                         '"*=int4,*/attn/wo=int8,lm_head=fp"')
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh", default="cpu", choices=["cpu", "pod", "multipod"])
@@ -56,8 +59,11 @@ def main(argv=None):
     from repro.launch.mesh import make_production_mesh, make_cpu_mesh
 
     cfg = C.reduced(args.arch) if args.reduced else C.get(args.arch)
-    q = dataclasses.replace(cfg.quant, mode=args.mode, bits=args.bits,
+    q = dataclasses.replace(cfg.quant.default, mode=args.mode, bits=args.bits,
                             **({"group_size": args.group_size} if args.group_size else {}))
+    if args.policy:
+        from repro.core.schemes import PolicyTree
+        q = PolicyTree.parse(args.policy, base=q)
     cfg = cfg.scaled(quant=q)
     lm = LM(cfg)
 

@@ -18,7 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, rope, constrain
+from .common import (QuantPolicy, dense_view, linear_init, linear_apply,
+                     rmsnorm, rmsnorm_init, rope, constrain)
 from .scan_utils import cscan, cmap
 
 NEG_INF = -1e30
@@ -157,10 +158,10 @@ def gqa_init(key, cfg: AttnConfig, pol: QuantPolicy):
     ks = jax.random.split(key, 4)
     h, kvh, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
     p = {
-        "wq": linear_init(ks[0], d, h * hd, pol),
-        "wk": linear_init(ks[1], d, kvh * hd, pol),
-        "wv": linear_init(ks[2], d, kvh * hd, pol),
-        "wo": linear_init(ks[3], h * hd, d, pol),
+        "wq": linear_init(ks[0], d, h * hd, pol.at("wq")),
+        "wk": linear_init(ks[1], d, kvh * hd, pol.at("wk")),
+        "wv": linear_init(ks[2], d, kvh * hd, pol.at("wv")),
+        "wo": linear_init(ks[3], h * hd, d, pol.at("wo")),
     }
     if cfg.qk_norm:
         p["qn"] = rmsnorm_init(hd)
@@ -281,12 +282,13 @@ def mla_init(key, cfg: MLAConfig, pol: QuantPolicy):
     h = cfg.n_heads
     qk = cfg.qk_nope_dim + cfg.qk_rope_dim
     return {
-        "q_down": linear_init(ks[0], cfg.d_model, cfg.q_lora_rank, pol),
-        "q_up": linear_init(ks[1], cfg.q_lora_rank, h * qk, pol),
-        "kv_down": linear_init(ks[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, pol),
+        "q_down": linear_init(ks[0], cfg.d_model, cfg.q_lora_rank, pol.at("q_down")),
+        "q_up": linear_init(ks[1], cfg.q_lora_rank, h * qk, pol.at("q_up")),
+        "kv_down": linear_init(ks[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim,
+                               pol.at("kv_down")),
         "kv_up": linear_init(ks[3], cfg.kv_lora_rank,
-                             h * (cfg.qk_nope_dim + cfg.v_head_dim), pol),
-        "wo": linear_init(ks[4], h * cfg.v_head_dim, cfg.d_model, pol),
+                             h * (cfg.qk_nope_dim + cfg.v_head_dim), pol.at("kv_up")),
+        "wo": linear_init(ks[4], h * cfg.v_head_dim, cfg.d_model, pol.at("wo")),
         "qn": rmsnorm_init(cfg.q_lora_rank),
         "kvn": rmsnorm_init(cfg.kv_lora_rank),
     }
@@ -345,7 +347,7 @@ def mla_decode(p, x, cache, cur_len, cfg: MLAConfig, pol: QuantPolicy):
     krc = _insert_token(cache["kr"], kr_new, cur_len)
 
     # absorb kv_up's K-half into q  (W_uk: rank -> H*nope)
-    w_uk, w_uv = _kv_up_split(p, cfg, pol)  # [rank,H,nope], [rank,H,vdim]
+    w_uk, w_uv = _kv_up_split(p, cfg, x.dtype)  # [rank,H,nope], [rank,H,vdim]
     q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
                      w_uk.astype(jnp.float32))  # [B,1,H,rank]
     s_c = jnp.einsum("bqhr,bkr->bhqk", q_c, cc.astype(jnp.float32))
@@ -361,14 +363,10 @@ def mla_decode(p, x, cache, cur_len, cfg: MLAConfig, pol: QuantPolicy):
     return out, {"c": cc, "kr": krc}
 
 
-def _kv_up_split(p, cfg: MLAConfig, pol):
-    """Effective (adapter-included) kv_up weight, split into K and V halves."""
-    from .common import merge_linear
-    from repro.core.quant import dequantize
-    from repro.core.nf4 import nf4_dequantize
-    m = merge_linear(p["kv_up"], pol)
-    w = dequantize(m["q"]) if "q" in m else (
-        nf4_dequantize(m["nf4"]) if "nf4" in m else m["w"])
+def _kv_up_split(p, cfg: MLAConfig, dtype):
+    """Effective (adapter-included) kv_up weight, split into K and V halves,
+    dequantized in the *activation* dtype (not the storage default)."""
+    w = dense_view(p["kv_up"], dtype=dtype)
     h = cfg.n_heads
     w = w.reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim)
     return w[..., : cfg.qk_nope_dim], w[..., cfg.qk_nope_dim:]

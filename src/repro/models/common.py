@@ -5,104 +5,23 @@ keeps them trivially `scan`-able over layers and `eval_shape`-able for
 allocation-free dry-runs.
 
 Every projection matrix goes through :func:`linear_init` /
-:func:`linear_apply`, which dispatch on the framework-wide
-:class:`QuantPolicy`:
-
-  mode="fp"      plain dense weight (pretraining / accuracy reference)
-  mode="lora"    fp base + unconstrained LoRA            (baseline)
-  mode="qlora"   NF4 base + unconstrained LoRA           (baseline)
-  mode="qalora"  INT-N group-wise base + group-pooled adapter  (the paper)
-
-so the paper's technique is a first-class, globally-switchable feature.
+:func:`linear_apply` from :mod:`repro.core.schemes` — the registered
+LinearScheme API (fp / lora / qlora / qalora / intq, plus any scheme a
+downstream registers).  Params are tagged :class:`LinearParams`
+containers carrying their scheme + resolved :class:`QuantPolicy`, so the
+paper's technique is a first-class per-layer policy: pass a uniform
+``QuantPolicy`` or a glob-pattern ``PolicyTree`` as ``cfg.quant`` and
+thread it through the inits with ``pol.at("name")``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import lora as lora_lib
-from repro.core import nf4 as nf4_lib
-from repro.core import qalora as qalora_lib
-from repro.core import quant as quant_lib
-
-
-@dataclasses.dataclass(frozen=True)
-class QuantPolicy:
-    mode: str = "qalora"  # fp | lora | qlora | qalora
-    bits: int = 4
-    group_size: int = 32
-    rank: int = 16
-    s: float = 2.0
-    use_kernel: bool = False  # route through the Pallas kernels
-    dtype: Any = jnp.float32  # compute/adapter dtype
-    scale_dtype: Any = jnp.float32  # quantization scale/zero storage dtype
-
-FP = QuantPolicy(mode="fp")
-
-
-# ---------------------------------------------------------------------------
-# linear
-# ---------------------------------------------------------------------------
-
-
-def linear_init(key, d_in: int, d_out: int, pol: QuantPolicy,
-                quantize_policy: bool = True):
-    """Init one projection. ``quantize_policy=False`` forces fp (routers,
-    norms-adjacent small matrices that the quantization literature keeps
-    high-precision)."""
-    if pol.mode == "fp" or not quantize_policy:
-        w = jax.random.normal(key, (d_in, d_out), pol.dtype) / jnp.sqrt(d_in).astype(pol.dtype)
-        return {"w": w}
-    k1, k2 = jax.random.split(key)
-    w = jax.random.normal(k1, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
-    if pol.mode == "lora":
-        return {"w": w.astype(pol.dtype),
-                "ad": lora_lib.init_lora(k2, d_in, pol.rank, d_out, pol.dtype)}
-    if pol.mode == "qlora":
-        return {"nf4": nf4_lib.nf4_quantize(w),
-                "ad": lora_lib.init_lora(k2, d_in, pol.rank, d_out, pol.dtype)}
-    if pol.mode == "qalora":
-        qt = quant_lib.quantize(w, pol.bits, pol.group_size, scale_dtype=pol.scale_dtype)
-        return {"q": qt,
-                "ad": qalora_lib.init_qalora(k2, qt.n_groups, pol.rank, d_out, pol.dtype)}
-    raise ValueError(pol.mode)
-
-
-def linear_apply(p, x, pol: QuantPolicy):
-    if "w" in p and "ad" not in p:
-        return x @ p["w"].astype(x.dtype)
-    if "w" in p:
-        return lora_lib.lora_forward(x, p["w"].astype(x.dtype), p["ad"], pol.s)
-    if "nf4" in p:
-        if "ad" not in p:  # merged-for-deployment NF4 (never happens: QLoRA
-            return x @ nf4_lib.nf4_dequantize(p["nf4"], x.dtype)  # merges to fp)
-        return lora_lib.qlora_forward(x, p["nf4"], p["ad"], pol.s)
-    # qalora (or a bare quantized linear after merge / PTQ)
-    if "ad" not in p:
-        if pol.use_kernel:
-            from repro.kernels import qmatmul
-            return qmatmul(x, p["q"])
-        return x @ quant_lib.dequantize(p["q"], x.dtype)
-    if pol.use_kernel:
-        from repro.kernels import qalora_matmul  # lazy: kernels optional
-        return qalora_matmul(x, p["q"], p["ad"], s=pol.s)
-    return qalora_lib.qalora_forward(x, p["q"], p["ad"], pol.s, compute_dtype=x.dtype)
-
-
-def merge_linear(p, pol: QuantPolicy):
-    """Merge the adapter for deployment. QA-LoRA stays quantized (exact);
-    QLoRA falls back to fp (the paper's Table-1 '4+16' row)."""
-    if "q" in p:
-        return {"q": qalora_lib.merge(p["q"], p["ad"], pol.s)}
-    if "nf4" in p:
-        return {"w": lora_lib.qlora_merge_fp(p["nf4"], p["ad"], pol.s)}
-    if "ad" in p:
-        return {"w": lora_lib.lora_merge(p["w"], p["ad"], pol.s)}
-    return p
+from repro.core.schemes import (  # noqa: F401  (re-exported API)
+    FP, LinearParams, PolicyTree, QuantPolicy, dense_view, linear_apply,
+    linear_init, merge_linear)
 
 
 # ---------------------------------------------------------------------------

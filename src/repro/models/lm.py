@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import schemes
 from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, constrain
 from .attention import (AttnConfig, MLAConfig, gqa_init, gqa_apply, gqa_decode,
                         gqa_init_cache, mla_init, mla_apply, mla_decode,
@@ -75,15 +76,16 @@ def _rwkv_cfg(cfg: ArchConfig) -> RWKV6Config:
 def _gqa_block_init(key, cfg: ArchConfig, pol: QuantPolicy, moe: bool = False):
     ks = jax.random.split(key, 4)
     p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
-         "attn": gqa_init(ks[0], _attn_cfg(cfg), pol)}
+         "attn": gqa_init(ks[0], _attn_cfg(cfg), pol.at("attn"))}
     if moe:
         p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
-                            cfg.n_experts, pol,
+                            cfg.n_experts, pol.at("moe"),
                             n_shared=cfg.n_shared_experts,
                             shared_d_ff=cfg.moe_d_ff or cfg.d_ff,
                             routing=cfg.routing)
     else:
-        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol.at("mlp"),
+                            cfg.gated_mlp)
     return p
 
 
@@ -125,13 +127,14 @@ def _gqa_block_decode(p, x, cache, cur_len, cfg: ArchConfig, pol, *,
 def _mla_block_init(key, cfg: ArchConfig, pol, moe: bool):
     ks = jax.random.split(key, 2)
     p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
-         "attn": mla_init(ks[0], _mla_cfg(cfg), pol)}
+         "attn": mla_init(ks[0], _mla_cfg(cfg), pol.at("attn"))}
     if moe:
         p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
-                            pol, n_shared=cfg.n_shared_experts,
+                            pol.at("moe"), n_shared=cfg.n_shared_experts,
                             shared_d_ff=cfg.moe_d_ff, routing=cfg.routing)
     else:
-        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol.at("mlp"),
+                            cfg.gated_mlp)
     return p
 
 
@@ -216,49 +219,64 @@ class LM:
             "final_ln": rmsnorm_init(d),
         }
         if not cfg.tie_embeddings:
-            params["head"] = jax.random.normal(ks[1], (d, cfg.vocab), pol.dtype) * 0.02
+            # lm_head is exempt from catch-all quantization rules; an
+            # explicit "lm_head=..." policy rule opts it in.
+            w = jax.random.normal(ks[1], (d, cfg.vocab), pol.dtype) * 0.02
+            hpol = schemes.resolve_path(pol, "lm_head")
+            params["head"] = (schemes.dense_linear(w, hpol)
+                              if hpol.mode == "fp"
+                              else schemes.from_dense_linear(
+                                  jax.random.fold_in(ks[1], 1), w, hpol))
 
         fam = cfg.family
         if fam in ("gqa", "gqa_moe"):
             moe = fam == "gqa_moe"
+            bpol = pol.at("blocks")
             params["blocks"] = jax.vmap(
-                lambda k: _gqa_block_init(k, cfg, pol, moe))(
+                lambda k: _gqa_block_init(k, cfg, bpol, moe))(
                     jax.random.split(ks[2], cfg.n_layers))
         elif fam == "mla_moe":
             nd = cfg.n_dense_layers
+            dpol, mpol = pol.at("dense_blocks"), pol.at("moe_blocks")
             params["dense_blocks"] = jax.vmap(
-                lambda k: _mla_block_init(k, cfg, pol, False))(
+                lambda k: _mla_block_init(k, cfg, dpol, False))(
                     jax.random.split(ks[2], nd))
             params["moe_blocks"] = jax.vmap(
-                lambda k: _mla_block_init(k, cfg, pol, True))(
+                lambda k: _mla_block_init(k, cfg, mpol, True))(
                     jax.random.split(ks[3], cfg.n_layers - nd))
             if cfg.mtp:
-                params["mtp_proj"] = linear_init(ks[4], 2 * d, d, pol,
+                params["mtp_proj"] = linear_init(ks[4], 2 * d, d,
+                                                 pol.at("mtp_proj"),
                                                  quantize_policy=False)
-                params["mtp_block"] = _mla_block_init(ks[5], cfg, pol, False)
+                params["mtp_block"] = _mla_block_init(ks[5], cfg,
+                                                      pol.at("mtp_block"), False)
                 params["mtp_ln"] = rmsnorm_init(d)
         elif fam == "mamba_hybrid":
             n_groups, per, tail = self._hybrid_layout()
             mcfg = _mamba_cfg(cfg)
+            gpol, tpol = pol.at("mamba_groups"), pol.at("mamba_tail")
             params["mamba_groups"] = jax.vmap(jax.vmap(
-                lambda k: mamba2_init(k, mcfg, pol)))(
+                lambda k: mamba2_init(k, mcfg, gpol)))(
                     jax.random.split(ks[2], n_groups * per).reshape(n_groups, per, 2))
             params["mamba_tail"] = jax.vmap(
-                lambda k: mamba2_init(k, mcfg, pol))(jax.random.split(ks[3], tail))
-            params["shared_attn"] = _gqa_block_init(ks[4], cfg, pol, False)
+                lambda k: mamba2_init(k, mcfg, tpol))(jax.random.split(ks[3], tail))
+            params["shared_attn"] = _gqa_block_init(ks[4], cfg,
+                                                    pol.at("shared_attn"), False)
         elif fam == "rwkv":
             rcfg = _rwkv_cfg(cfg)
+            bpol = pol.at("blocks")
             def blk(k):
                 k1, k2 = jax.random.split(k)
                 return {"ln1": rmsnorm_init(d), "ln2": rmsnorm_init(d),
-                        "mix": rwkv6_init(k1, rcfg, pol)}
+                        "mix": rwkv6_init(k1, rcfg, bpol.at("mix"))}
             params["blocks"] = jax.vmap(blk)(jax.random.split(ks[2], cfg.n_layers))
         elif fam == "encdec":
+            epol, dpol = pol.at("enc_blocks"), pol.at("dec_blocks")
             params["enc_blocks"] = jax.vmap(
-                lambda k: self._enc_block_init(k))(
+                lambda k: self._enc_block_init(k, epol))(
                     jax.random.split(ks[2], cfg.n_enc_layers))
             params["dec_blocks"] = jax.vmap(
-                lambda k: self._dec_block_init(k))(
+                lambda k: self._dec_block_init(k, dpol))(
                     jax.random.split(ks[3], cfg.n_layers))
             params["enc_ln"] = rmsnorm_init(d)
         else:
@@ -272,21 +290,23 @@ class LM:
         tail = cfg.n_layers - n_groups * cfg.attn_every
         return n_groups, per, tail
 
-    def _enc_block_init(self, key):
-        cfg, pol = self.cfg, self.cfg.quant
+    def _enc_block_init(self, key, pol):
+        cfg = self.cfg
         ks = jax.random.split(key, 2)
         return {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
-                "attn": gqa_init(ks[0], _attn_cfg(cfg), pol),
-                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)}
+                "attn": gqa_init(ks[0], _attn_cfg(cfg), pol.at("attn")),
+                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, pol.at("mlp"),
+                                cfg.gated_mlp)}
 
-    def _dec_block_init(self, key):
-        cfg, pol = self.cfg, self.cfg.quant
+    def _dec_block_init(self, key, pol):
+        cfg = self.cfg
         ks = jax.random.split(key, 3)
         return {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
                 "ln3": rmsnorm_init(cfg.d_model),
-                "attn": gqa_init(ks[0], _attn_cfg(cfg), pol),
-                "cross": cross_init(ks[1], _attn_cfg(cfg), pol),
-                "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, pol, cfg.gated_mlp)}
+                "attn": gqa_init(ks[0], _attn_cfg(cfg), pol.at("attn")),
+                "cross": cross_init(ks[1], _attn_cfg(cfg), pol.at("cross")),
+                "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, pol.at("mlp"),
+                                cfg.gated_mlp)}
 
     # ---------------- shared pieces ----------------
 
@@ -308,11 +328,18 @@ class LM:
         return constrain(x, (("pod", "data"), None, None))
 
     def _head_w(self, params):
-        return (params["embed"].T if self.cfg.tie_embeddings
-                else params["head"]["w"] if isinstance(params.get("head"), dict)
-                else params["head"])
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        h = params["head"]
+        # tagged linear (possibly quantized via an explicit lm_head policy
+        # rule) or a legacy raw array from an old checkpoint
+        return h if hasattr(h, "ndim") else schemes.dense_view(h)
 
     def _logits(self, params, h):
+        if not self.cfg.tie_embeddings and schemes.is_linear(params.get("head")):
+            # tagged head: scheme apply (kernel-routed when quantized via an
+            # explicit lm_head policy rule) instead of densify-then-matmul
+            return schemes.linear_apply(params["head"], h).astype(jnp.float32)
         return (h @ self._head_w(params).astype(h.dtype)).astype(jnp.float32)
 
     def _xent(self, params, h, labels):

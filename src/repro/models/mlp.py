@@ -11,11 +11,11 @@ from .common import QuantPolicy, linear_init, linear_apply, act_fn, constrain
 def mlp_init(key, d_model: int, d_ff: int, pol: QuantPolicy, gated: bool = True):
     ks = jax.random.split(key, 3)
     p = {
-        "up": linear_init(ks[1], d_model, d_ff, pol),
-        "down": linear_init(ks[2], d_ff, d_model, pol),
+        "up": linear_init(ks[1], d_model, d_ff, pol.at("up")),
+        "down": linear_init(ks[2], d_ff, d_model, pol.at("down")),
     }
     if gated:
-        p["gate"] = linear_init(ks[0], d_model, d_ff, pol)
+        p["gate"] = linear_init(ks[0], d_model, d_ff, pol.at("gate"))
     return p
 
 

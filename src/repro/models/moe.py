@@ -61,21 +61,23 @@ _COMBINE_SPECS = (
 def moe_init(key, d_model: int, d_ff: int, n_experts: int, pol: QuantPolicy,
              n_shared: int = 0, shared_d_ff: int = 0, routing: str = "softmax"):
     ks = jax.random.split(key, 5)
-    def expert_mat(k, d_in, d_out):
+    def expert_mat(k, d_in, d_out, name):
         # one stacked init per expert: vmap the linear initializer
-        return jax.vmap(lambda kk: linear_init(kk, d_in, d_out, pol))(
+        return jax.vmap(lambda kk: linear_init(kk, d_in, d_out, pol.at(name)))(
             jax.random.split(k, n_experts))
     p = {
-        "router": linear_init(ks[0], d_model, n_experts, pol, quantize_policy=False),
-        "gate": expert_mat(ks[1], d_model, d_ff),
-        "up": expert_mat(ks[2], d_model, d_ff),
-        "down": expert_mat(ks[3], d_ff, d_model),
+        "router": linear_init(ks[0], d_model, n_experts, pol.at("router"),
+                              quantize_policy=False),
+        "gate": expert_mat(ks[1], d_model, d_ff, "gate"),
+        "up": expert_mat(ks[2], d_model, d_ff, "up"),
+        "down": expert_mat(ks[3], d_ff, d_model, "down"),
     }
     if routing == "sigmoid":
         p["bias"] = jnp.zeros((n_experts,), jnp.float32)  # aux-free balancing bias
     if n_shared:
         from .mlp import mlp_init
-        p["shared"] = mlp_init(ks[4], d_model, shared_d_ff * n_shared, pol)
+        p["shared"] = mlp_init(ks[4], d_model, shared_d_ff * n_shared,
+                               pol.at("shared"))
     return p
 
 

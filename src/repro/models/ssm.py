@@ -58,8 +58,8 @@ def mamba2_init(key, cfg: Mamba2Config, pol: QuantPolicy):
     ks = jax.random.split(key, 4)
     d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.n_heads  # z,x,B,C,dt
     return {
-        "in_proj": linear_init(ks[0], cfg.d_model, d_in_proj, pol),
-        "out_proj": linear_init(ks[1], cfg.d_inner, cfg.d_model, pol),
+        "in_proj": linear_init(ks[0], cfg.d_model, d_in_proj, pol.at("in_proj")),
+        "out_proj": linear_init(ks[1], cfg.d_inner, cfg.d_model, pol.at("out_proj")),
         "conv_w": jax.random.normal(ks[2], (cfg.conv_width, cfg.conv_dim), jnp.float32) * 0.1,
         "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
         "dt_bias": jnp.zeros((cfg.n_heads,), jnp.float32),
@@ -207,11 +207,11 @@ def rwkv6_init(key, cfg: RWKV6Config, pol: QuantPolicy):
     d = cfg.d_model
     p = {
         # time mix
-        "wr": linear_init(ks[0], d, d, pol),
-        "wk": linear_init(ks[1], d, d, pol),
-        "wv": linear_init(ks[2], d, d, pol),
-        "wg": linear_init(ks[3], d, d, pol),
-        "wo": linear_init(ks[4], d, d, pol),
+        "wr": linear_init(ks[0], d, d, pol.at("wr")),
+        "wk": linear_init(ks[1], d, d, pol.at("wk")),
+        "wv": linear_init(ks[2], d, d, pol.at("wv")),
+        "wg": linear_init(ks[3], d, d, pol.at("wg")),
+        "wo": linear_init(ks[4], d, d, pol.at("wo")),
         "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,g,w shift-mix
         "w0": jnp.full((d,), -6.0, jnp.float32),
         "w1": jax.random.normal(ks[5], (d, cfg.decay_lora), jnp.float32) * 0.02,
@@ -219,9 +219,9 @@ def rwkv6_init(key, cfg: RWKV6Config, pol: QuantPolicy):
         "u": jax.random.normal(ks[7], (cfg.n_heads, cfg.head_dim), jnp.float32) * 0.1,
         "ln_x": rmsnorm_init(d),
         # channel mix
-        "ck": linear_init(ks[8], d, cfg.d_ff, pol),
-        "cv": linear_init(ks[9], cfg.d_ff, d, pol),
-        "cr": linear_init(ks[10], d, d, pol),
+        "ck": linear_init(ks[8], d, cfg.d_ff, pol.at("ck")),
+        "cv": linear_init(ks[9], cfg.d_ff, d, pol.at("cv")),
+        "cr": linear_init(ks[10], d, d, pol.at("cr")),
         "cmu": 0.5 * jnp.ones((2, d), jnp.float32),
     }
     return p

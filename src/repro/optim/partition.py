@@ -1,9 +1,16 @@
 """Trainable/frozen parameter partition.
 
-QA-LoRA trains ONLY the adapters: every leaf under an ``"ad"`` dict key
-(QALoRAParams / LoRAParams).  The quantized base, embeddings, norms,
-routers stay frozen — the optimizer never sees them, so optimizer state is
-~1e-3 of model size (the paper's Table-2 #Params column).
+QA-LoRA trains ONLY the adapters.  Which leaves are adapters is decided
+by each linear's registered scheme (``scheme.trainable_paths``, see
+:mod:`repro.core.schemes`) — not by sniffing dict keys — so a new scheme
+registers its trainable state once and the optimizer picks it up
+everywhere.  The quantized base, embeddings, norms, routers stay frozen:
+the optimizer never sees them, so optimizer state is ~1e-3 of model size
+(the paper's Table-2 #Params column).
+
+A scheme that declares trainable state but has none in its params raises
+(the old ``"ad"`` key heuristic silently trained nothing for a misnamed
+pytree).
 """
 
 from __future__ import annotations
@@ -11,25 +18,15 @@ from __future__ import annotations
 from typing import Any, Tuple
 
 import jax
-from jax.tree_util import DictKey
 
-
-def _is_trainable_path(path) -> bool:
-    return any(isinstance(k, DictKey) and k.key == "ad" for k in path)
-
-
-def trainable_mask(params) -> Any:
-    """Pytree of bools, True where the leaf is an adapter parameter."""
-    return jax.tree_util.tree_map_with_path(
-        lambda p, _: _is_trainable_path(p), params)
+from repro.core.schemes import trainable_mask  # noqa: F401  (public re-export)
 
 
 def split_params(params) -> Tuple[Any, Any]:
     """(trainable, frozen): same treedef, None on the other side's leaves."""
-    train = jax.tree_util.tree_map_with_path(
-        lambda p, x: x if _is_trainable_path(p) else None, params)
-    frozen = jax.tree_util.tree_map_with_path(
-        lambda p, x: None if _is_trainable_path(p) else x, params)
+    mask = trainable_mask(params)
+    train = jax.tree.map(lambda m, x: x if m else None, mask, params)
+    frozen = jax.tree.map(lambda m, x: None if m else x, mask, params)
     return train, frozen
 
 

@@ -69,22 +69,24 @@ def test_merged_model_equals_finetuned_model():
     params, _ = _train(lm, params, stream, steps=10)
     merged = merge_model(params, cfg.quant)
 
-    # merged model has NO adapter keys left and the SAME integer codes
+    # merged model has NO adapter state left and the SAME integer codes
+    from repro.core import schemes
+
     def collect(tree, key):
         out = []
-        def walk(p):
-            if isinstance(p, dict):
-                for k, v in p.items():
-                    if k == key:
-                        out.append(v)
-                    else:
-                        walk(v)
-        walk(tree)
+
+        def one(path, lp):
+            if key in lp.data:
+                out.append(lp.data[key])
+            return lp
+
+        schemes.map_linears(tree, one)
         return out
 
     assert not collect(merged, "ad")
     q_before = collect(params, "q")
     q_after = collect(merged, "q")
+    assert q_before and len(q_before) == len(q_after)
     for qa, qb in zip(q_after, q_before):
         np.testing.assert_array_equal(np.asarray(qa.qweight), np.asarray(qb.qweight))
         np.testing.assert_array_equal(np.asarray(qa.scale), np.asarray(qb.scale))
