@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke lint verify dev-deps
+.PHONY: test test-fast smoke lint verify verify-fast dev-deps
 
 dev-deps:
 	pip install -r requirements-dev.txt
@@ -10,9 +10,14 @@ dev-deps:
 test:
 	$(PY) -m pytest -x -q
 
-# decode/kernel micro-bench as a smoke check (writes experiments/bench_results.json)
+# inner-loop lane: deselects @pytest.mark.slow (engine equivalence +
+# property sweeps) and reports the slowest tests
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow" --durations=15
+
+# decode/kernel/engine micro-bench as a smoke check (writes experiments/bench_results.json)
 smoke:
-	$(PY) -m benchmarks.run --only kernels,decode
+	$(PY) -m benchmarks.run --only kernels,decode,engine
 
 # static checks (ruff.toml); strict when ruff is installed
 lint:
@@ -20,3 +25,5 @@ lint:
 	else echo "[lint] ruff not installed; run 'make dev-deps'"; fi
 
 verify: lint test smoke
+
+verify-fast: lint test-fast

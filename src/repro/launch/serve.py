@@ -5,16 +5,28 @@ is STILL INT-N (integer codes + scales unchanged, zeros updated) — no
 FP16 fallback, no PTQ step, identical outputs to the adapter model
 (asserted at startup with --verify).
 
-Decode path (the hot path): one jitted prefill over the whole prompt
-(`steps.make_prefill_step`), then `steps.make_generate_step` — a
-`jax.lax.scan` over `lm.decode_step` that compiles the entire greedy
-generation into ONE program.  No per-token Python dispatch, no host sync
-until the generated block is ready.  `--loop` falls back to the legacy
-per-token loop (kept as the timing/equivalence reference).
+Engines (`--engine`):
+  static      (default) one fixed-shape batch start-to-finish: jitted
+              prefill over the whole prompt (`steps.make_prefill_step`),
+              then `steps.make_generate_step` — a `jax.lax.scan` over
+              `lm.decode_step` compiling the entire greedy generation
+              into ONE program.  A request that finishes early wastes its
+              slot until the longest request completes.  Kept as the
+              reference path.  `--loop` falls back further, to the legacy
+              per-token loop (the timing/equivalence reference).
+  continuous  in-flight batching (`repro.serving.ContinuousEngine`):
+              queued requests are admitted into free KV-cache slots
+              mid-flight, prompts prefill in chunks alongside decoding
+              slots, and each request terminates at its own EOS/max-len
+              with immediate slot eviction + refill.  Token streams are
+              identical to running each request alone through the static
+              path (tests/test_serving_engine.py).
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
       --requests 4 --prompt-len 16 --gen-len 8 --verify
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+      --engine continuous --requests 8 --slots 4 --gen-len 12
 """
 
 from __future__ import annotations
@@ -128,6 +140,17 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static",
+                    help="static: one fixed-shape batch (reference); "
+                         "continuous: in-flight batching with slot refill")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous engine KV slots (default "
+                         "min(4, requests))")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="continuous engine prompt chunk size")
+    ap.add_argument("--decode-burst", type=int, default=8,
+                    help="continuous engine fused decode steps per dispatch")
     ap.add_argument("--loop", action="store_true",
                     help="use the legacy per-token loop instead of scan")
     ap.add_argument("--policy", default="",
@@ -172,7 +195,27 @@ def main(argv=None):
     use_loop = args.loop or cfg.family == "encdec"
     mesh = make_cpu_mesh()
     with mesh:
-        if use_loop:
+        if args.engine == "continuous":
+            from repro.serving import ContinuousEngine
+            if args.loop:
+                ap.error("--loop is the static reference path; "
+                         "drop it or use --engine static")
+            if args.gen_len < 1:
+                ap.error("--engine continuous needs --gen-len >= 1")
+            slots = args.slots or min(4, b)
+            eng = ContinuousEngine(lm, merged, n_slots=slots,
+                                   max_len=max_len,
+                                   prefill_chunk=args.prefill_chunk,
+                                   decode_burst=args.decode_burst)
+            rids = [eng.submit(prompts[i], args.gen_len)
+                    for i in range(b)]
+            outputs = eng.run()
+            st = eng.stats
+            gen = np.asarray([outputs[r] for r in rids], dtype=np.int32)
+            dt, path = st.seconds, (f"continuous, {slots} slots, "
+                                    f"occupancy {st.occupancy:.0%}, "
+                                    f"{st.dispatches} dispatches")
+        elif use_loop:
             gen, dt = generate_loop_reference(
                 lm, merged, prompts, args.gen_len, max_len)
             path = "per-token loop"

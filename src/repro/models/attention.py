@@ -119,23 +119,39 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     return out.astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, cur_len, *, window=None):
-    """One-token attention. q: [B,1,H,Dq]; caches: [B,S,KvH,D*]."""
-    b, _, h, dq = q.shape
+def chunk_attention(q, k_cache, v_cache, qpos, *, window=None):
+    """Ragged-chunk attention against a slotted cache.
+
+    q: [B,C,H,Dq]; caches: [B,S,KvH,D*]; qpos: [B,C] absolute position of
+    each query row (per-slot ragged — row i of slot b attends to cache
+    positions <= qpos[b, i]).  Masked cache entries hit exp(NEG_INF) == 0
+    exactly, so results are independent of the cache capacity S and of
+    whatever stale KV a previous slot occupant left beyond qpos.
+    """
+    b, c, h, dq = q.shape
     _, s, kvh, _ = k_cache.shape
     g = h // kvh
-    qg = q.reshape(b, 1, kvh, g, dq)
+    qg = q.reshape(b, c, kvh, g, dq)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                         k_cache.astype(jnp.float32)) / math.sqrt(dq)
     kpos = jnp.arange(s)
-    valid = kpos[None, :] < cur_len[:, None]  # [B, S]
+    valid = kpos[None, None, :] <= qpos[:, :, None]  # [B, C, S]
     if window is not None:
         active = window > 0
-        valid &= (kpos[None, :] > (cur_len[:, None] - 1 - window)) | ~active
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        valid &= (kpos[None, None, :] > (qpos[:, :, None] - window)) | ~active
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, h, -1).astype(q.dtype)
+    return out.reshape(b, c, h, -1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=None):
+    """One-token attention. q: [B,1,H,Dq]; caches: [B,S,KvH,D*].
+
+    ``cur_len`` counts valid cache entries INCLUDING the just-inserted
+    token, so the query row sits at absolute position cur_len - 1."""
+    return chunk_attention(q, k_cache, v_cache, (cur_len - 1)[:, None],
+                           window=window)
 
 
 # ---------------------------------------------------------------------------
@@ -203,17 +219,12 @@ def gqa_apply(p, x, cfg: AttnConfig, pol: QuantPolicy, positions=None,
 
 def gqa_decode(p, x, cache, cur_len, cfg: AttnConfig, pol: QuantPolicy,
                window=None, theta=None):
-    """x: [B,1,d]; cache: dict(k,v: [B,S,KvH,hd]); cur_len: [B] tokens so far."""
-    b = x.shape[0]
-    positions = cur_len[:, None]  # [B,1]
-    q, k, v = _qkv(p, x, cfg, pol, positions, theta)
-    # per-example cur_len insert via one-hot to stay batched:
-    kc = _insert_token(cache["k"], k, cur_len)
-    vc = _insert_token(cache["v"], v, cur_len)
-    window = cfg.window if window is None else window
-    o = decode_attention(q, kc, vc, cur_len + 1, window=window)
-    out = linear_apply(p["wo"], o.reshape(b, 1, -1), pol)
-    return out, {"k": kc, "v": vc}
+    """x: [B,1,d]; cache: dict(k,v: [B,S,KvH,hd]); cur_len: [B] tokens so
+    far.  The C=1 always-active special case of :func:`gqa_prefill_chunk`
+    — one copy of the decode math for every serve path."""
+    return gqa_prefill_chunk(p, x, cache, cur_len,
+                             jnp.ones_like(cur_len), cfg, pol,
+                             window=window, theta=theta)
 
 
 def _insert_token(cache, new, cur_len):
@@ -224,7 +235,45 @@ def _insert_token(cache, new, cur_len):
     return jnp.where(oh, new.astype(cache.dtype), cache)
 
 
+def _insert_tokens(cache, new, cur_len, n_new):
+    """Ragged multi-token insert: write new[b, i] at position cur_len[b] + i
+    for i < n_new[b]; rows i >= n_new[b] are dropped (cache [B,S,...],
+    new [B,C,...], cur_len / n_new [B]).  Generalizes :func:`_insert_token`
+    to per-slot chunk lengths — the continuous-batching prefill path."""
+    s, c = cache.shape[1], new.shape[1]
+    pos = cur_len[:, None] + jnp.arange(c)[None, :]           # [B, C]
+    pos = jnp.where(jnp.arange(c)[None, :] < n_new[:, None], pos, s)
+    oh = (jnp.arange(s)[None, :, None] == pos[:, None, :])    # [B, S, C]
+    # contract over C (einsum, not broadcast-then-sum: no [B,S,C,...]
+    # transient — at serving S that would be C x the cache per layer)
+    ins = jnp.einsum("bsc,bc...->bs...", oh.astype(cache.dtype),
+                     new.astype(cache.dtype))
+    hit = oh.any(axis=2).reshape(oh.shape[:2] + (1,) * (cache.ndim - 2))
+    return jnp.where(hit, ins, cache)
+
+
+def gqa_prefill_chunk(p, x, cache, cur_len, n_new, cfg: AttnConfig,
+                      pol: QuantPolicy, window=None, theta=None):
+    """Ragged chunk step: x [B,C,d]; slot b consumes rows [:n_new[b]] at
+    positions cur_len[b].. (per-slot rotary offsets), inserts their K/V
+    into the slotted cache, and attends causally against it.  C == 1 with
+    n_new in {0,1} is masked decode; larger C is chunked prefill.  Rows
+    i >= n_new[b] compute garbage but never touch the cache."""
+    b, c, _ = x.shape
+    positions = cur_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    q, k, v = _qkv(p, x, cfg, pol, positions, theta)
+    kc = _insert_tokens(cache["k"], k, cur_len, n_new)
+    vc = _insert_tokens(cache["v"], v, cur_len, n_new)
+    window = cfg.window if window is None else window
+    o = chunk_attention(q, kc, vc, positions, window=window)
+    out = linear_apply(p["wo"], o.reshape(b, c, -1), pol)
+    return out, {"k": kc, "v": vc}
+
+
 def gqa_init_cache(batch: int, seq: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    """Slotted KV cache: each of the ``batch`` slots owns a private [seq]
+    ragged region (its valid prefix is tracked per-slot by the caller's
+    ``len`` vector; see :meth:`repro.models.lm.LM.init_cache`)."""
     shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 

@@ -33,8 +33,9 @@ from repro.configs.base import ArchConfig
 from repro.core import schemes
 from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, constrain
 from .attention import (AttnConfig, MLAConfig, gqa_init, gqa_apply, gqa_decode,
-                        gqa_init_cache, mla_init, mla_apply, mla_decode,
-                        mla_init_cache, cross_init, cross_kv, cross_apply)
+                        gqa_init_cache, gqa_prefill_chunk, mla_init, mla_apply,
+                        mla_decode, mla_init_cache, cross_init, cross_kv,
+                        cross_apply)
 from .mlp import mlp_init, mlp_apply
 from .moe import moe_init, moe_apply
 from .ssm import (Mamba2Config, RWKV6Config, mamba2_init, mamba2_mix,
@@ -110,9 +111,18 @@ def _gqa_block(p, x, cfg: ArchConfig, pol, *, window=None, theta=None,
 
 def _gqa_block_decode(p, x, cache, cur_len, cfg: ArchConfig, pol, *,
                       window=None, theta=None, moe=False):
-    a, cache = gqa_decode(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
-                          cache, cur_len, _attn_cfg(cfg), pol,
-                          window=window, theta=theta)
+    """One-token decode == the C=1 always-active chunk step (kept as a
+    named entry point for the static/encdec/hybrid paths)."""
+    return _gqa_block_chunk(p, x, cache, cur_len, jnp.ones_like(cur_len),
+                            cfg, pol, window=window, theta=theta, moe=moe)
+
+
+def _gqa_block_chunk(p, x, cache, cur_len, n_new, cfg: ArchConfig, pol, *,
+                     window=None, theta=None, moe=False):
+    """Ragged chunk through one block: x [B,C,d], per-slot n_new consumed."""
+    a, cache = gqa_prefill_chunk(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                 cache, cur_len, n_new, _attn_cfg(cfg), pol,
+                                 window=window, theta=theta)
     x = x + a
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if moe:
@@ -613,23 +623,17 @@ class LM:
         """tokens: [B,1] -> (logits [B,V], updated cache). One serve step."""
         cfg, pol = self.cfg, self.cfg.quant
         fam = cfg.family
+        if fam in ("gqa", "gqa_moe"):
+            # the C=1 always-active special case of the ragged serve step
+            # — ONE implementation of the gqa decode math, so the static
+            # and continuous engines cannot silently diverge
+            return self.step_ragged(params, cache, tokens,
+                                    jnp.ones_like(cache["len"]))
         cur = cache["len"]
         x = self._embed(params, tokens)
         layers = cache["layers"]
 
-        if fam in ("gqa", "gqa_moe"):
-            moe = fam == "gqa_moe"
-            window, theta = self._layer_extras()
-
-            def body(xc, xs):
-                blk, kvc, w_, t_ = xs
-                y, kvc = _gqa_block_decode(blk, xc, kvc, cur, cfg, pol,
-                                           window=w_, theta=t_, moe=moe)
-                return y, kvc
-
-            x, layers = cscan(body, x, (params["blocks"], layers, window, theta),
-                              name="layers")
-        elif fam == "mla_moe":
+        if fam == "mla_moe":
             def mk_body(moe):
                 def body(xc, xs):
                     blk, cc = xs
@@ -698,6 +702,51 @@ class LM:
         h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
         logits = self._logits(params, h)[:, 0]
         return logits, {"layers": layers, "len": cur + 1}
+
+    def step_ragged(self, params, cache, tokens, n_new):
+        """Ragged serve step for continuous batching (gqa / gqa_moe).
+
+        ``tokens`` [B, C] int32, ``n_new`` [B] in [0, C]: slot b consumes
+        ``tokens[b, :n_new[b]]`` at positions ``len[b]..len[b]+n_new[b]-1``
+        of its private cache region and advances only by ``n_new[b]``.
+        One compiled program therefore serves any mix of slot states —
+        chunked prefill (n_new == C), in-flight decode (n_new == 1) and
+        free/finished slots (n_new == 0, cache and length untouched) —
+        which is what lets the engine admit requests mid-flight.
+
+        Returns (logits [B, V] at each slot's LAST consumed row — garbage
+        for n_new == 0 slots, callers must mask — and the updated cache).
+
+        Per-slot results are independent of the other slots' content for
+        dense gqa; for gqa_moe, finite expert capacity routes over ALL
+        B*C rows (idle and padding rows included), so logits depend on
+        batch composition — the same batch-dependence the static path
+        has between whole-prompt prefill and per-token decode.
+        """
+        cfg, pol = self.cfg, self.cfg.quant
+        fam = cfg.family
+        if fam not in ("gqa", "gqa_moe"):
+            raise NotImplementedError(
+                f"step_ragged supports gqa/gqa_moe families, not {fam!r}")
+        cur = cache["len"]
+        n_new = n_new.astype(jnp.int32)
+        x = self._embed(params, tokens)
+        moe = fam == "gqa_moe"
+        window, theta = self._layer_extras()
+
+        def body(xc, xs):
+            blk, kvc, w_, t_ = xs
+            y, kvc = _gqa_block_chunk(blk, xc, kvc, cur, n_new, cfg, pol,
+                                      window=w_, theta=t_, moe=moe)
+            return y, kvc
+
+        x, layers = cscan(body, x, (params["blocks"], cache["layers"],
+                                    window, theta), name="layers")
+        h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        last = jnp.clip(n_new - 1, 0, tokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+        logits = self._logits(params, h_last)[:, 0]
+        return logits, {"layers": layers, "len": cur + n_new}
 
     # ---------------- serving: prefill + scan decode ----------------
 

@@ -1,0 +1,16 @@
+"""Continuous-batching serving engine (slotted KV cache, in-flight
+batching, chunked prefill, per-request termination).
+
+    from repro.serving import ContinuousEngine
+    eng = ContinuousEngine(lm, merged, n_slots=4, max_len=64)
+    rid = eng.submit(prompt_ids, max_new_tokens=16, eos_id=None)
+    outputs = eng.run()          # {rid: [tok, ...]}
+    eng.stats.tok_per_s, eng.stats.occupancy
+"""
+
+from .engine import ContinuousEngine, EngineStats
+from .scheduler import Request, Scheduler, Slot
+from .trace import make_trace, static_schedule
+
+__all__ = ["ContinuousEngine", "EngineStats", "Request", "Scheduler",
+           "Slot", "make_trace", "static_schedule"]

@@ -1,0 +1,207 @@
+"""Continuous-batching serving engine on top of the scan decode path.
+
+The engine drives :meth:`repro.models.lm.LM.step_ragged` — one compiled
+ragged step that lets every cache slot advance by its own number of
+tokens — with the host-side :class:`~repro.serving.scheduler.Scheduler`
+deciding what each slot consumes:
+
+  * admission: queued requests enter free slots mid-flight; the slot's
+    length is reset to 0 and its stale KV is never read (all masks are
+    bounded by the slot's own length);
+  * chunked prefill: prompts stream in ``prefill_chunk``-token chunks
+    while decode slots ride along in the same batch (in-flight batching);
+  * per-request termination: slots stop at EOS or ``max_new_tokens`` and
+    are evicted + refilled immediately;
+  * decode bursts: when every active slot is decoding, ``decode_burst``
+    steps run as ONE fused ``lax.scan`` program with per-slot stop masks
+    (finished slots idle on-device until the burst returns), amortizing
+    the per-step dispatch that made the legacy loop slow (PR 1).
+
+For dense GQA families, token streams are identical for any
+``prefill_chunk`` / ``decode_burst`` setting and identical to running
+each request alone through the static ``generate_scan`` path
+(tests/test_serving_engine.py).  For MoE (gqa_moe) the engine runs, but
+finite expert capacity makes routing depend on batch composition —
+co-resident slots (and idle rows) compete for capacity, so per-request
+streams are NOT reproducible across batch mixes.  This is inherent to
+capacity-routed MoE under any batched serving (the static path has the
+same scan-vs-loop caveat, PR 1); treat MoE serving as approximate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scheduler import Request, Scheduler
+
+
+def _ragged_step(lm, params, cache, tokens, n_new):
+    # argmax in-graph: the host only needs next tokens, not [B, vocab]
+    # logits (at real vocab sizes that transfer dominates the step)
+    logits, cache = lm.step_ragged(params, cache, tokens, n_new)
+    return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+
+def _burst_steps(lm, params, cache, tok, remaining, eos, *, k_steps: int):
+    """lax.scan of masked single-token ragged steps.  A slot whose
+    remaining count hits 0 (max-len or EOS) stops consuming (n_new=0) so
+    its cache and length freeze until the host evicts it."""
+
+    def body(carry, _):
+        cache, tok, remaining = carry
+        active = remaining > 0
+        logits, cache = lm.step_ragged(params, cache, tok[:, None],
+                                       active.astype(jnp.int32))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, tok)
+        emit = jnp.where(active, nxt, -1)
+        stop = active & ((remaining <= 1) | (nxt == eos))
+        remaining = jnp.where(stop, 0, jnp.where(active, remaining - 1, 0))
+        return (cache, nxt, remaining), emit
+
+    (cache, tok, remaining), emitted = jax.lax.scan(
+        body, (cache, tok, remaining), None, length=k_steps)
+    return cache, tok, remaining, emitted
+
+
+# one shared compile cache across engine instances: `lm` is a hashable
+# frozen dataclass, so jit memoizes per (lm, shapes) — building a second
+# engine for the same model does not re-trace
+_JIT_STEP = jax.jit(_ragged_step, static_argnums=0)
+_JIT_BURST = jax.jit(_burst_steps, static_argnums=0,
+                     static_argnames=("k_steps",))
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregates one :meth:`ContinuousEngine.run`."""
+
+    model_steps: int = 0      # single-token-equivalent model invocations
+    dispatches: int = 0       # host->device program launches
+    tokens_out: int = 0       # useful generated tokens
+    slot_steps: int = 0       # slots x decode-capable steps
+    busy_slot_steps: int = 0  # of those, slots that consumed a token
+    seconds: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        return self.busy_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_out / max(self.seconds, 1e-9)
+
+
+class ContinuousEngine:
+    """Serve an LM with in-flight batching over a slotted KV cache.
+
+    ``n_slots`` concurrent requests share one cache of per-slot capacity
+    ``max_len`` (each request needs prompt + max_new <= max_len).  Only
+    gqa / gqa_moe families are supported (the families with a slotted KV
+    cache); recurrent-state families keep the static path.
+    """
+
+    def __init__(self, lm, params, *, n_slots: int, max_len: int,
+                 prefill_chunk: int = 8, decode_burst: int = 8,
+                 cache_dtype=jnp.float32):
+        if lm.cfg.family not in ("gqa", "gqa_moe"):
+            raise NotImplementedError(
+                f"continuous engine needs a slotted KV cache; family "
+                f"{lm.cfg.family!r} is not supported (use --engine static)")
+        self.lm, self.params = lm, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.prefill_chunk = prefill_chunk
+        self.decode_burst = max(1, decode_burst)
+        self.cache_dtype = cache_dtype
+        self.reset()
+
+    def reset(self):
+        """Drop all queued/in-flight state (compiled steps are shared
+        module-wide and survive)."""
+        self.sched = Scheduler(self.n_slots, self.max_len, self.prefill_chunk)
+        self.cache = self.lm.init_cache(self.n_slots, self.max_len,
+                                        dtype=self.cache_dtype)
+        self.stats = EngineStats()
+
+    # ---------------- public API ----------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None,
+               rid: Optional[int] = None) -> int:
+        """Queue a request; returns its rid (key into run()'s results).
+        Pass ``rid`` to keep a caller-side id (e.g. a trace's pinned
+        rid); omitted rids auto-assign past any pinned ones."""
+        req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      rid=-1 if rid is None else rid)
+        return self.sched.submit(req)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Serve until queue and slots drain; returns rid -> token list
+        (stats in :attr:`stats`)."""
+        t0 = time.time()
+        while self.sched.has_work:
+            self._iterate()
+        self.stats.seconds += time.time() - t0
+        return self.sched.outputs
+
+    # ---------------- one engine iteration ----------------
+
+    def _iterate(self):
+        filled = self.sched.admit()
+        if filled:
+            # evict + refill: reset the slots' lengths in one batched
+            # update; stale KV beyond them is masked out by construction
+            self.cache["len"] = self.cache["len"].at[
+                jnp.asarray(filled)].set(0)
+        if self.sched.all_decoding:
+            self._run_burst()
+        else:
+            self._run_ragged()
+
+    def _run_ragged(self):
+        """One mixed prefill/decode ragged step."""
+        tokens, n_new = self.sched.plan()
+        nxt, self.cache = _JIT_STEP(self.lm, self.params, self.cache,
+                                    jnp.asarray(tokens),
+                                    jnp.asarray(n_new))
+        nxt = np.asarray(nxt)
+        # slots past their prompt after this plan emit one token each;
+        # mid-prompt slots consume rows but emit nothing yet
+        emitting = sum(1 for i, s in enumerate(self.sched.slots)
+                       if s is not None and n_new[i] > 0 and not s.prefilling)
+        self.sched.commit(nxt)
+        st = self.stats
+        st.dispatches += 1
+        st.model_steps += int(tokens.shape[1])
+        st.slot_steps += self.n_slots
+        st.busy_slot_steps += int((n_new > 0).sum())
+        st.tokens_out += emitting
+
+    def _run_burst(self):
+        """K fused decode steps in one program (per-slot stop masks)."""
+        tok, remaining, eos = self.sched.burst_state()
+        # follow the SHORTEST active request so finished slots are evicted
+        # and refilled promptly (occupancy), rounding DOWN to a power of
+        # two: never overshoots the shortest request, and only
+        # O(log(decode_burst)) scan programs ever compile.  An EOS-stopped
+        # slot still idles on-device until the burst returns.
+        k_min = int(remaining[remaining > 0].min())
+        k = int(min(self.decode_burst, 1 << (k_min.bit_length() - 1)))
+        self.cache, tok_d, rem_d, emitted = _JIT_BURST(
+            self.lm, self.params, self.cache, jnp.asarray(tok),
+            jnp.asarray(remaining), jnp.asarray(eos), k_steps=k)
+        emitted = np.asarray(emitted)
+        self.sched.commit_burst(emitted, np.asarray(tok_d), np.asarray(rem_d))
+        st = self.stats
+        st.dispatches += 1
+        st.model_steps += k
+        st.slot_steps += self.n_slots * k
+        st.busy_slot_steps += int((emitted >= 0).sum())
+        st.tokens_out += int((emitted >= 0).sum())

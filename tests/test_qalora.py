@@ -31,6 +31,7 @@ def _adapter(key, n_groups, rank, d_out, scale=0.3):
         b=jax.random.normal(k2, (rank, d_out)) * scale)
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=30)
 @given(
     bits=st.sampled_from([2, 3, 4, 8]),
@@ -57,6 +58,39 @@ def test_merge_exactness_property(bits, group, d_in, d_out, rank, s, seed):
     # integer codes and scales untouched
     np.testing.assert_array_equal(np.asarray(merged.qweight), np.asarray(qt.qweight))
     np.testing.assert_array_equal(np.asarray(merged.scale), np.asarray(qt.scale))
+
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=25)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    group=st.sampled_from([32, 64]),
+    gmult=st.integers(1, 3),
+    d_out=st.integers(4, 40),
+    rank=st.sampled_from([1, 4, 8]),
+    s=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**16),
+)
+def test_merge_dequant_matches_adapter_forward_random_shapes(
+        bits, group, gmult, d_out, rank, s, seed):
+    """Appendix-B exactness on free-form shapes: d_in any multiple of the
+    paper's deployment group sizes (32/64), arbitrary d_out — the merged
+    INT-N layer's dequantized matmul stays within fp tolerance of the
+    adapter forward (and the integer codes / scales are untouched)."""
+    d_in = group * gmult
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (d_in, d_out))
+    qt = quantize(w, bits, group)
+    p = _adapter(jax.random.fold_in(k, 1), d_in // group, rank, d_out)
+    x = jax.random.normal(jax.random.fold_in(k, 2), (3, d_in))
+    merged = merge(qt, p, s)
+    np.testing.assert_allclose(np.asarray(qalora_forward(x, qt, p, s)),
+                               np.asarray(x @ dequantize(merged)),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_array_equal(np.asarray(merged.qweight),
+                                  np.asarray(qt.qweight))
+    np.testing.assert_array_equal(np.asarray(merged.scale),
+                                  np.asarray(qt.scale))
 
 
 def test_adapter_effective_weight_is_group_constant():

@@ -27,6 +27,49 @@ def test_pack_unpack_roundtrip(bits):
     np.testing.assert_array_equal(np.asarray(out), q)
 
 
+@pytest.mark.slow
+@settings(deadline=None, max_examples=40)
+@given(
+    bits=st.sampled_from(BITS),
+    rows=st.integers(1, 12),
+    d_out=st.integers(1, 33),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_unpack_bit_identity_property(bits, rows, d_out, seed):
+    """pack -> unpack reproduces the integer codes bit-for-bit for ANY
+    shape whose axis 0 is a multiple of the packing density."""
+    rng = np.random.default_rng(seed)
+    d_in = rows * codes_per_byte(bits)
+    q = rng.integers(0, 2**bits, size=(d_in, d_out)).astype(np.uint8)
+    packed = pack(jnp.asarray(q), bits)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (d_in // codes_per_byte(bits), d_out)
+    np.testing.assert_array_equal(np.asarray(unpack(packed, bits)), q)
+
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=25)
+@given(
+    bits=st.sampled_from(BITS),
+    group=st.sampled_from([32, 64]),
+    gmult=st.integers(1, 3),
+    d_out=st.sampled_from([8, 24, 48]),
+    seed=st.integers(0, 2**16),
+)
+def test_quantized_storage_bit_identity(bits, group, gmult, d_out, seed):
+    """The packed storage of a real quantized layer survives an
+    unpack -> pack cycle bit-identically, and every code is in range."""
+    d_in = group * gmult
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d_in, d_out))
+    qt = quantize(w, bits, group)
+    codes = unpack(qt.qweight, bits)
+    assert int(jnp.max(codes)) < 2**bits
+    assert qt.scale.shape == (d_in // group, d_out)
+    np.testing.assert_array_equal(np.asarray(pack(codes, bits)),
+                                  np.asarray(qt.qweight))
+
+
+@pytest.mark.slow
 @settings(deadline=None, max_examples=25)
 @given(
     bits=st.sampled_from(BITS),

@@ -1,0 +1,162 @@
+"""Slotted-cache primitives: ragged multi-token insert, chunk attention
+vs decode attention, per-slot ragged lengths through the model step, and
+slot eviction + refill without stale-KV leakage."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.launch.serve import merge_model
+from repro.models.attention import (_insert_token, _insert_tokens,
+                                    chunk_attention, decode_attention)
+from repro.models.lm import LM
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = C.reduced("gemma3-1b")
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+    return cfg, lm, merged
+
+
+def _prompt(n, seed=0, vocab=256):
+    return np.random.default_rng(seed).integers(
+        4, vocab, size=(1, n)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_insert_tokens_matches_sequential_single_inserts():
+    key = jax.random.PRNGKey(0)
+    cache = jnp.zeros((3, 10, 2, 4))
+    new = jax.random.normal(key, (3, 4, 2, 4))
+    cur = jnp.array([0, 3, 7])
+    n_new = jnp.array([4, 2, 3])
+
+    got = _insert_tokens(cache, new, cur, n_new)
+
+    want = cache
+    for i in range(4):
+        write = i < n_new
+        # emulate per-slot sequential insert, skipping masked rows
+        one = _insert_token(want, new[:, i:i + 1], cur + i)
+        want = jnp.where(write[:, None, None, None], one, want)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_insert_tokens_zero_rows_is_identity():
+    cache = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 1, 3))
+    new = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 1, 3))
+    out = _insert_tokens(cache, new, jnp.array([2, 5]), jnp.array([0, 0]))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(cache))
+
+
+def test_chunk_attention_c1_equals_decode_attention():
+    key = jax.random.PRNGKey(3)
+    b, s, h, kvh, d = 2, 9, 4, 2, 8
+    q = jax.random.normal(key, (b, 1, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    cur = jnp.array([3, 7])  # valid lengths INCLUDING the current token
+    for window in (None, 4):
+        a = decode_attention(q, k, v, cur, window=window)
+        c = chunk_attention(q, k, v, (cur - 1)[:, None], window=window)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c))
+
+
+def test_chunk_attention_ignores_cache_beyond_qpos():
+    """Entries past each row's position must not leak — stale KV from an
+    evicted request changes nothing."""
+    key = jax.random.PRNGKey(4)
+    b, s, h, kvh, d = 1, 8, 2, 1, 4
+    q = jax.random.normal(key, (b, 2, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    qpos = jnp.array([[2, 3]])
+    base = chunk_attention(q, k, v, qpos)
+    k2 = k.at[:, 4:].set(99.0)  # poison the "stale" region
+    v2 = v.at[:, 4:].set(-99.0)
+    poisoned = chunk_attention(q, k2, v2, qpos)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))
+
+
+# ---------------------------------------------------------------------------
+# model-level ragged step
+# ---------------------------------------------------------------------------
+
+
+def test_step_ragged_different_cur_len_per_slot(served):
+    """Two slots at different lengths decode in one batch, each matching
+    its own single-request run."""
+    cfg, lm, merged = served
+    pa, pb = _prompt(3, seed=1), _prompt(6, seed=2)
+    step1 = jax.jit(lm.decode_step)
+
+    refs = []
+    for p in (pa, pb):
+        cache = lm.init_cache(1, 12, jnp.float32)
+        logits = None
+        for i in range(p.shape[1]):
+            logits, cache = step1(merged, cache, jnp.asarray(p[:, i:i + 1]))
+        refs.append(np.asarray(logits)[0])
+
+    # batched ragged: feed each slot its own prompt length in chunks
+    cache = lm.init_cache(2, 12, jnp.float32)
+    step = jax.jit(lm.step_ragged)
+    toks = np.zeros((2, 6), np.int32)
+    toks[0, :3] = pa[0]
+    toks[1, :6] = pb[0]
+    logits, cache = step(merged, cache, jnp.asarray(toks),
+                         jnp.asarray([3, 6]))
+    assert cache["len"].tolist() == [3, 6]
+    np.testing.assert_allclose(np.asarray(logits)[0], refs[0],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(logits)[1], refs[1],
+                               rtol=1e-4, atol=1e-4)
+
+    # one more ragged step with only slot 1 active: slot 0 frozen exactly
+    frozen_k = np.asarray(jax.tree.leaves(cache["layers"])[0])[:, 0]
+    logits2, cache = step(merged, cache,
+                          jnp.asarray([[0], [5]], np.int32),
+                          jnp.asarray([0, 1]))
+    assert cache["len"].tolist() == [3, 7]
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(cache["layers"])[0])[:, 0], frozen_k)
+
+
+def test_slot_refill_no_stale_kv(served):
+    """Evicting a long request and prefilling a short one into the same
+    slot gives the same logits as a fresh cache — the previous occupant's
+    KV beyond the new length is never read."""
+    cfg, lm, merged = served
+    long_p, short_p = _prompt(9, seed=3), _prompt(4, seed=4)
+    step = jax.jit(lm.step_ragged)
+
+    def chunked_prefill(cache, prompt, slot, n_slots):
+        for i in range(0, prompt.shape[1], 3):
+            chunk = prompt[:, i:i + 3]
+            toks = np.zeros((n_slots, chunk.shape[1]), np.int32)
+            toks[slot, :chunk.shape[1]] = chunk[0]
+            n_new = np.zeros((n_slots,), np.int32)
+            n_new[slot] = chunk.shape[1]
+            logits, cache = step(merged, cache, jnp.asarray(toks),
+                                 jnp.asarray(n_new))
+        return logits, cache
+
+    # occupy slot 1 with the long request, then evict + refill with short
+    cache = lm.init_cache(2, 12, jnp.float32)
+    _, cache = chunked_prefill(cache, long_p, slot=1, n_slots=2)
+    assert cache["len"].tolist() == [0, 9]
+    cache["len"] = cache["len"].at[1].set(0)         # evict
+    reused, cache = chunked_prefill(cache, short_p, slot=1, n_slots=2)
+
+    fresh_cache = lm.init_cache(2, 12, jnp.float32)
+    fresh, _ = chunked_prefill(fresh_cache, short_p, slot=1, n_slots=2)
+    np.testing.assert_allclose(np.asarray(reused)[1], np.asarray(fresh)[1],
+                               rtol=1e-5, atol=1e-5)
