@@ -385,35 +385,25 @@ def decode_bench():
                  f"{max_len - 1} dispatches")
 
 
-def engine_bench():
-    """Serving-engine throughput: continuous batching vs static batching
-    under a mixed-length request trace.
-
-    Same merged INT4 model, same FIFO trace (one long request per group
-    of ``slots``, the rest short).  Static batching runs each group
-    through the compiled prefill+scan path and must decode every slot to
-    the group's LONGEST request; the continuous engine evicts each slot
-    at its own max-len and refills it from the queue mid-flight (chunked
-    prefill + fused decode bursts).  tok/s counts USEFUL tokens (each
-    request's own max_new_tokens) over wall time; both paths are warmed
-    (compiled) by a first pass and timed on the second.
-    """
-    import repro.configs as C
+def _engine_compare(cfg, prefix, *, slots, prompt_len, long_gen, short_gen,
+                    n_requests, decode_burst=16, note=""):
+    """One continuous-vs-static engine row set for ``cfg``: same merged
+    model, same FIFO trace (one long request per group of ``slots``, the
+    rest short).  Static batching runs each group through the compiled
+    prefill+scan path and must decode every slot to the group's LONGEST
+    request; the continuous engine evicts each slot at its own max-len
+    and refills it from the queue mid-flight.  tok/s counts USEFUL tokens
+    over wall time; both paths are warmed (compiled) first, timed after."""
     from repro.launch.mesh import make_cpu_mesh
     from repro.launch.serve import merge_model, make_scan_generator
     from repro.models.lm import LM
     from repro.serving import ContinuousEngine, make_trace, static_schedule
 
-    # a notch above smoke size: at d_model=64 a decode step is so cheap
-    # that per-dispatch host overhead (which the engine pays more of)
-    # swamps the slot-waste signal the table is about
-    cfg = C.reduced("gemma3-1b", d_model=128, n_layers=4, d_ff=256,
-                    n_heads=8, n_kv_heads=2)
     lm = LM(cfg)
     merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
 
-    slots, prompt_len, long_gen, short_gen = 4, 4, 96, 2
-    trace = make_trace(16, cfg.vocab, seed=0, prompt_lens=(prompt_len,),
+    trace = make_trace(n_requests, cfg.vocab, seed=0,
+                       prompt_lens=(prompt_len,),
                        gen_lens=(long_gen, short_gen, short_gen, short_gen))
     useful = sum(r.max_new_tokens for r in trace)
     max_len = prompt_len + long_gen
@@ -436,7 +426,8 @@ def engine_bench():
             return dt
 
         eng = ContinuousEngine(lm, merged, n_slots=slots, max_len=max_len,
-                               prefill_chunk=prompt_len, decode_burst=16)
+                               prefill_chunk=prompt_len,
+                               decode_burst=decode_burst)
 
         def run_continuous():
             eng.reset()
@@ -453,17 +444,44 @@ def engine_bench():
     static_steps = sum(g for _, g in groups)
     static_occ = useful / (static_steps * slots)
     tok_s_static = useful / dt_s
-    emit("engine", "static-tok_s", round(tok_s_static, 1),
+    emit("engine", f"{prefix}static-tok_s", round(tok_s_static, 1),
          f"{len(groups)} batches x{slots}, each decodes its longest "
          f"({static_steps} steps for {useful} useful tokens, "
-         f"occupancy {static_occ:.0%})")
-    emit("engine", "continuous-tok_s", round(st.tok_per_s, 1),
+         f"occupancy {static_occ:.0%}){note}")
+    emit("engine", f"{prefix}continuous-tok_s", round(st.tok_per_s, 1),
          f"slot eviction+refill: occupancy {st.occupancy:.0%}, "
-         f"{st.dispatches} dispatches, {st.model_steps} model steps")
-    emit("engine", "continuous-speedup",
+         f"{st.dispatches} dispatches, {st.model_steps} model steps{note}")
+    emit("engine", f"{prefix}continuous-speedup",
          round(st.tok_per_s / tok_s_static, 2),
          f"continuous vs static on the mixed trace "
-         f"({long_gen}/{short_gen}-token request mix)")
+         f"({long_gen}/{short_gen}-token request mix){note}")
+
+
+def engine_bench():
+    """Serving-engine throughput: continuous batching vs static batching
+    under a mixed-length request trace — one row set per slotted-cache
+    family (gqa at a d128/L4 gemma3, MLA compressed-KV at a reduced
+    deepseek-v3 with its real dense/MoE layer split)."""
+    import repro.configs as C
+
+    # a notch above smoke size: at d_model=64 a decode step is so cheap
+    # that per-dispatch host overhead (which the engine pays more of)
+    # swamps the slot-waste signal the table is about
+    _engine_compare(
+        C.reduced("gemma3-1b", d_model=128, n_layers=4, d_ff=256,
+                  n_heads=8, n_kv_heads=2),
+        "", slots=4, prompt_len=4, long_gen=96, short_gen=2, n_requests=16)
+
+    # MLA compressed-KV serving (deepseek-v3 geometry, absorbed decode,
+    # per-run hoisted W_uk/W_uv).  Kept smaller than the gqa row — the
+    # smoke job runs this on every PR; MoE layers route over all B*C
+    # rows, so this row measures throughput, not stream equivalence
+    # (tests/test_serving_mla.py gates that on the all-dense config).
+    _engine_compare(
+        C.reduced("deepseek-v3-671b", d_model=128, n_heads=8,
+                  q_lora_rank=64, kv_lora_rank=64, mtp=False),
+        "mla-", slots=2, prompt_len=4, long_gen=48, short_gen=2,
+        n_requests=8, note="; deepseek-v3 reduced, compressed-KV cache")
 
 
 def roofline_summary():

@@ -1,0 +1,58 @@
+"""Continuous-batching serving of a merged mixed-precision MLA model.
+
+    PYTHONPATH=src python examples/serve_continuous_mla.py
+
+Serves a reduced deepseek-v3 (`mla_moe`: MLA attention + routed MoE) with
+a per-layer PolicyTree — INT4 body, INT8 attention output projections, fp
+lm_head — merged QA-LoRA-style before serving.  The engine's slotted
+cache holds the COMPRESSED latent (`c` [slots, S, rank]) plus the rope
+key (`kr` [slots, S, rope]) instead of per-head K/V, and attention runs
+absorbed in the rank space; the effective (merged, dequantized) W_uk/W_uv
+are computed once at engine construction, never inside the per-step
+graph.  Requests outnumber slots so eviction + refill triggers, and one
+request gets an EOS id to show early slot turnover.
+
+MoE caveat (same as gqa_moe): expert capacity routes over every row in
+the batch, so per-request streams depend on batch composition — see the
+README serving section.
+"""
+
+import jax
+
+import repro.configs as C
+from repro.core.schemes import PolicyTree
+from repro.launch.serve import merge_model
+from repro.models.lm import LM
+from repro.serving import ContinuousEngine, make_trace
+
+cfg = C.reduced("deepseek-v3-671b", mtp=False)
+cfg = cfg.scaled(quant=PolicyTree.parse("*=int4,*/attn/wo=int8,lm_head=fp",
+                                        base=cfg.quant.default))
+lm = LM(cfg)
+params = lm.init(jax.random.PRNGKey(0))
+merged = merge_model(params)
+
+trace = make_trace(8, cfg.vocab, seed=1,
+                   prompt_lens=(3, 6, 10), gen_lens=(2, 12, 5))
+# give one request an EOS to show early eviction; max_new_tokens still
+# bounds it either way
+trace[2].eos_id = 7
+
+engine = ContinuousEngine(lm, merged, n_slots=3, max_len=32,
+                          prefill_chunk=4, decode_burst=4)
+for r in trace:
+    engine.submit(r.prompt, r.max_new_tokens, eos_id=r.eos_id, rid=r.rid)
+outputs = engine.run()
+
+for r in trace:
+    print(f"[serve-mla] req {r.rid}: prompt {len(r.prompt):2d} toks "
+          f"-> {outputs[r.rid]}")
+st = engine.stats
+rank = cfg.kv_lora_rank + cfg.qk_rope_dim
+print(f"[serve-mla] {st.tokens_out} tokens in {st.seconds:.2f}s "
+      f"({st.tok_per_s:.1f} tok/s) | {st.dispatches} dispatches, "
+      f"occupancy {st.occupancy:.0%} over {engine.n_slots} slots | "
+      f"compressed cache {rank} floats/token/layer vs "
+      f"{cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim)}"
+      f" if K/V were materialized per head "
+      f"(INT4 body / INT8 wo / fp head, merged)")

@@ -15,18 +15,25 @@ Engines (`--engine`):
               reference path.  `--loop` falls back further, to the legacy
               per-token loop (the timing/equivalence reference).
   continuous  in-flight batching (`repro.serving.ContinuousEngine`):
-              queued requests are admitted into free KV-cache slots
+              queued requests are admitted into free cache slots
               mid-flight, prompts prefill in chunks alongside decoding
               slots, and each request terminates at its own EOS/max-len
-              with immediate slot eviction + refill.  Token streams are
-              identical to running each request alone through the static
-              path (tests/test_serving_engine.py).
+              with immediate slot eviction + refill.  Serves the slotted
+              cache families: gqa / gqa_moe (per-head KV) and mla_moe
+              (deepseek-style compressed-KV, absorbed attention with the
+              effective W_uk/W_uv dequantized once up front).  Token
+              streams are identical to running each request alone
+              through the static path (tests/test_serving_engine.py,
+              tests/test_serving_mla.py; MoE layers carry the
+              capacity-routing caveat below).
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
       --requests 4 --prompt-len 16 --gen-len 8 --verify
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
       --engine continuous --requests 8 --slots 4 --gen-len 12
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b \
+      --reduced --engine continuous --requests 6 --slots 2 --gen-len 6
 """
 
 from __future__ import annotations
@@ -150,7 +157,8 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="continuous engine prompt chunk size")
     ap.add_argument("--decode-burst", type=int, default=8,
-                    help="continuous engine fused decode steps per dispatch")
+                    help="continuous engine fused decode steps per dispatch "
+                         "(clamped down to a power of two)")
     ap.add_argument("--loop", action="store_true",
                     help="use the legacy per-token loop instead of scan")
     ap.add_argument("--policy", default="",

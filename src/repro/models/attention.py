@@ -384,40 +384,87 @@ def mla_apply(p, x, cfg: MLAConfig, pol: QuantPolicy, positions=None):
     return out, (c, k_rope)
 
 
-def mla_decode(p, x, cache, cur_len, cfg: MLAConfig, pol: QuantPolicy):
-    """Absorbed decode: attention runs in the compressed (rank-512) space —
-    the cache stays [B,S,rank+rope], never expanded per head."""
-    b = x.shape[0]
-    h = cfg.n_heads
-    positions = cur_len[:, None]
-    q_nope, q_rope = _mla_q(p, x, cfg, pol, positions)  # [B,1,H,*]
+def mla_chunk_attention(q_c, q_rope, c_cache, kr_cache, qpos, *, scale):
+    """Absorbed ragged-chunk attention over the slotted compressed cache.
+
+    The MLA analogue of :func:`chunk_attention`: attention runs entirely
+    in the compressed (rank) space — ``c_cache`` [B,S,rank] +
+    ``kr_cache`` [B,S,rope] are the slotted cache, never expanded per
+    head.  ``q_c`` [B,C,H,rank] is the nope query pre-absorbed through
+    W_uk; ``q_rope`` [B,C,H,rope]; ``qpos`` [B,C] absolute position of
+    each query row (per-slot ragged — row i of slot b attends to cache
+    positions <= qpos[b, i]).  Returns the context still in compressed
+    space, [B,C,H,rank] float32 (callers up-project through W_uv).
+
+    Masked cache entries hit exp(NEG_INF) == 0 exactly, so results are
+    independent of the cache capacity S and of stale compressed KV a
+    previous slot occupant left beyond qpos; a fully-masked row (qpos <
+    0, an idle slot) degenerates to a uniform-weight average — garbage
+    but FINITE, so idle slots can never poison a batch with NaN.
+    """
+    s_c = jnp.einsum("bqhr,bkr->bhqk", q_c.astype(jnp.float32),
+                     c_cache.astype(jnp.float32))
+    s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    scores = (s_c + s_r) * scale
+    kpos = jnp.arange(c_cache.shape[1])
+    valid = kpos[None, None, :] <= qpos[:, :, None]  # [B, C, S]
+    scores = jnp.where(valid[:, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkr->bqhr", p, c_cache.astype(jnp.float32))
+
+
+def mla_prefill_chunk(p, x, cache, cur_len, n_new, cfg: MLAConfig,
+                      pol: QuantPolicy, w_kv=None):
+    """Ragged chunk step through MLA: x [B,C,d]; slot b consumes rows
+    [:n_new[b]] at positions cur_len[b].. (per-slot rotary offsets),
+    inserts their compressed latent / rope key into the slotted cache,
+    and runs absorbed attention against it.  C == 1 with n_new in {0,1}
+    is masked decode; larger C is chunked prefill.  Rows i >= n_new[b]
+    compute garbage but never touch the cache.
+
+    ``w_kv`` optionally supplies the precomputed effective (W_uk, W_uv)
+    pair ([rank,H,nope], [rank,H,vdim]) so the absorbed-weight dequant
+    runs OUTSIDE the per-step graph (the serving engine computes it once
+    per run); when None it is derived here via :func:`_kv_up_split`.
+    """
+    b, c, _ = x.shape
+    positions = cur_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    q_nope, q_rope = _mla_q(p, x, cfg, pol, positions)     # [B,C,H,*]
     c_new, kr_new = _mla_ckv(p, x, cfg, pol, positions)
-    cc = _insert_token(cache["c"], c_new, cur_len)
-    krc = _insert_token(cache["kr"], kr_new, cur_len)
+    cc = _insert_tokens(cache["c"], c_new, cur_len, n_new)
+    krc = _insert_tokens(cache["kr"], kr_new, cur_len, n_new)
 
     # absorb kv_up's K-half into q  (W_uk: rank -> H*nope)
-    w_uk, w_uv = _kv_up_split(p, cfg, x.dtype)  # [rank,H,nope], [rank,H,vdim]
+    w_uk, w_uv = w_kv if w_kv is not None else _kv_up_split(p, cfg, x.dtype)
     q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
-                     w_uk.astype(jnp.float32))  # [B,1,H,rank]
-    s_c = jnp.einsum("bqhr,bkr->bhqk", q_c, cc.astype(jnp.float32))
-    s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
-                     krc.astype(jnp.float32))
-    scores = (s_c + s_r) / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
-    valid = jnp.arange(cc.shape[1])[None, :] < (cur_len + 1)[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    pattn = jax.nn.softmax(scores, axis=-1)
-    ctx_c = jnp.einsum("bhqk,bkr->bqhr", pattn, cc.astype(jnp.float32))
+                     w_uk.astype(jnp.float32))             # [B,C,H,rank]
+    ctx_c = mla_chunk_attention(
+        q_c, q_rope, cc, krc, positions,
+        scale=1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim))
     o = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv.astype(jnp.float32))
-    out = linear_apply(p["wo"], o.reshape(b, 1, -1).astype(x.dtype), pol)
+    out = linear_apply(p["wo"], o.reshape(b, c, -1).astype(x.dtype), pol)
     return out, {"c": cc, "kr": krc}
+
+
+def mla_decode(p, x, cache, cur_len, cfg: MLAConfig, pol: QuantPolicy,
+               w_kv=None):
+    """Absorbed one-token decode — the C=1 always-active special case of
+    :func:`mla_prefill_chunk`, so the static and continuous engines share
+    one copy of the absorbed math."""
+    return mla_prefill_chunk(p, x, cache, cur_len, jnp.ones_like(cur_len),
+                             cfg, pol, w_kv=w_kv)
 
 
 def _kv_up_split(p, cfg: MLAConfig, dtype):
     """Effective (adapter-included) kv_up weight, split into K and V halves,
-    dequantized in the *activation* dtype (not the storage default)."""
+    dequantized in the *activation* dtype (not the storage default).
+    Handles leading stack dims (scanned layers): [..., rank, H, nope/vdim].
+    """
     w = dense_view(p["kv_up"], dtype=dtype)
     h = cfg.n_heads
-    w = w.reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    w = w.reshape(w.shape[:-2] + (cfg.kv_lora_rank, h,
+                                  cfg.qk_nope_dim + cfg.v_head_dim))
     return w[..., : cfg.qk_nope_dim], w[..., cfg.qk_nope_dim:]
 
 

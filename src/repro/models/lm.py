@@ -32,10 +32,11 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import schemes
 from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, constrain
-from .attention import (AttnConfig, MLAConfig, gqa_init, gqa_apply, gqa_decode,
-                        gqa_init_cache, gqa_prefill_chunk, mla_init, mla_apply,
-                        mla_decode, mla_init_cache, cross_init, cross_kv,
-                        cross_apply)
+from .attention import (AttnConfig, MLAConfig, _kv_up_split, gqa_init,
+                        gqa_apply, gqa_decode, gqa_init_cache,
+                        gqa_prefill_chunk, mla_init, mla_apply,
+                        mla_init_cache, mla_prefill_chunk, cross_init,
+                        cross_kv, cross_apply)
 from .mlp import mlp_init, mlp_apply
 from .moe import moe_init, moe_apply
 from .ssm import (Mamba2Config, RWKV6Config, mamba2_init, mamba2_mix,
@@ -180,9 +181,14 @@ def _mla_block_prefill(p, x, cfg, pol, moe=False):
     return x + m, ckv
 
 
-def _mla_block_decode(p, x, cache, cur_len, cfg, pol, moe=False):
-    a, cache = mla_decode(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
-                          cache, cur_len, _mla_cfg(cfg), pol)
+def _mla_block_chunk(p, x, cache, cur_len, n_new, cfg, pol, *, moe=False,
+                     w_kv=None):
+    """Ragged chunk through one MLA block: x [B,C,d], per-slot n_new
+    consumed.  ``w_kv`` optionally carries this layer's precomputed
+    absorbed (W_uk, W_uv) so no dequant runs in the step graph."""
+    a, cache = mla_prefill_chunk(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                 cache, cur_len, n_new, _mla_cfg(cfg), pol,
+                                 w_kv=w_kv)
     x = x + a
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if moe:
@@ -619,33 +625,24 @@ class LM:
             raise ValueError(fam)
         return {"layers": layers, "len": jnp.zeros((batch,), jnp.int32)}
 
-    def decode_step(self, params, cache, tokens):
-        """tokens: [B,1] -> (logits [B,V], updated cache). One serve step."""
+    def decode_step(self, params, cache, tokens, aux=None):
+        """tokens: [B,1] -> (logits [B,V], updated cache). One serve step.
+
+        ``aux`` optionally carries :meth:`absorbed_weights` output so the
+        MLA absorbed-weight dequant stays out of the per-step graph."""
         cfg, pol = self.cfg, self.cfg.quant
         fam = cfg.family
-        if fam in ("gqa", "gqa_moe"):
+        if fam in ("gqa", "gqa_moe", "mla_moe"):
             # the C=1 always-active special case of the ragged serve step
-            # — ONE implementation of the gqa decode math, so the static
-            # and continuous engines cannot silently diverge
+            # — ONE implementation of the decode math, so the static and
+            # continuous engines cannot silently diverge
             return self.step_ragged(params, cache, tokens,
-                                    jnp.ones_like(cache["len"]))
+                                    jnp.ones_like(cache["len"]), aux=aux)
         cur = cache["len"]
         x = self._embed(params, tokens)
         layers = cache["layers"]
 
-        if fam == "mla_moe":
-            def mk_body(moe):
-                def body(xc, xs):
-                    blk, cc = xs
-                    y, cc = _mla_block_decode(blk, xc, cc, cur, cfg, pol, moe=moe)
-                    return y, cc
-                return body
-            x, dc = cscan(mk_body(False), x,
-                          (params["dense_blocks"], layers["dense"]), name="dense_blocks")
-            x, mc = cscan(mk_body(True), x,
-                          (params["moe_blocks"], layers["moe"]), name="moe_blocks")
-            layers = {"dense": dc, "moe": mc}
-        elif fam == "mamba_hybrid":
+        if fam == "mamba_hybrid":
             mcfg = _mamba_cfg(cfg)
             shared = params["shared_attn"]
 
@@ -703,8 +700,25 @@ class LM:
         logits = self._logits(params, h)[:, 0]
         return logits, {"layers": layers, "len": cur + 1}
 
-    def step_ragged(self, params, cache, tokens, n_new):
-        """Ragged serve step for continuous batching (gqa / gqa_moe).
+    def absorbed_weights(self, params):
+        """Precompute the per-layer effective (adapter-merged, dequantized)
+        absorbed MLA weights — the step-invariant piece of the absorbed
+        decode path.  Returns ``{"dense": (W_uk, W_uv), "moe": ...}`` with
+        leading layer axes for ``mla_moe`` (``None`` for every other
+        family).  Serving loops compute this ONCE and thread it through
+        :meth:`step_ragged` / :meth:`decode_step` as ``aux``, so the
+        rank-512 ``kv_up`` dequant never re-runs inside a per-token step
+        (per step per layer it is pure hot-path waste)."""
+        if self.cfg.family != "mla_moe":
+            return None
+        mcfg = _mla_cfg(self.cfg)
+        dt = self.cfg.quant.dtype
+        return {"dense": _kv_up_split(params["dense_blocks"]["attn"], mcfg, dt),
+                "moe": _kv_up_split(params["moe_blocks"]["attn"], mcfg, dt)}
+
+    def step_ragged(self, params, cache, tokens, n_new, aux=None):
+        """Ragged serve step for continuous batching (gqa / gqa_moe /
+        mla_moe — the slotted-cache families).
 
         ``tokens`` [B, C] int32, ``n_new`` [B] in [0, C]: slot b consumes
         ``tokens[b, :n_new[b]]`` at positions ``len[b]..len[b]+n_new[b]-1``
@@ -714,34 +728,58 @@ class LM:
         free/finished slots (n_new == 0, cache and length untouched) —
         which is what lets the engine admit requests mid-flight.
 
+        ``aux`` optionally carries :meth:`absorbed_weights` output; when
+        given, the MLA absorbed-weight dequant stays OUT of this graph.
+
         Returns (logits [B, V] at each slot's LAST consumed row — garbage
         for n_new == 0 slots, callers must mask — and the updated cache).
 
         Per-slot results are independent of the other slots' content for
-        dense gqa; for gqa_moe, finite expert capacity routes over ALL
-        B*C rows (idle and padding rows included), so logits depend on
-        batch composition — the same batch-dependence the static path
-        has between whole-prompt prefill and per-token decode.
+        dense attention (gqa, and mla_moe layers without MoE); for MoE
+        layers, finite expert capacity routes over ALL B*C rows (idle and
+        padding rows included), so logits depend on batch composition —
+        the same batch-dependence the static path has between
+        whole-prompt prefill and per-token decode.
         """
         cfg, pol = self.cfg, self.cfg.quant
         fam = cfg.family
-        if fam not in ("gqa", "gqa_moe"):
+        if fam not in ("gqa", "gqa_moe", "mla_moe"):
             raise NotImplementedError(
-                f"step_ragged supports gqa/gqa_moe families, not {fam!r}")
+                f"step_ragged supports the slotted-cache families "
+                f"(gqa/gqa_moe/mla_moe), not {fam!r}")
         cur = cache["len"]
         n_new = n_new.astype(jnp.int32)
         x = self._embed(params, tokens)
-        moe = fam == "gqa_moe"
-        window, theta = self._layer_extras()
 
-        def body(xc, xs):
-            blk, kvc, w_, t_ = xs
-            y, kvc = _gqa_block_chunk(blk, xc, kvc, cur, n_new, cfg, pol,
-                                      window=w_, theta=t_, moe=moe)
-            return y, kvc
+        if fam == "mla_moe":
+            def mk_body(moe):
+                def body(xc, xs):
+                    blk, cc, w_kv = xs
+                    y, cc = _mla_block_chunk(blk, xc, cc, cur, n_new, cfg,
+                                             pol, moe=moe, w_kv=w_kv)
+                    return y, cc
+                return body
+            wkv_d = aux["dense"] if aux is not None else None
+            wkv_m = aux["moe"] if aux is not None else None
+            x, dc = cscan(mk_body(False), x,
+                          (params["dense_blocks"], cache["layers"]["dense"],
+                           wkv_d), name="dense_blocks")
+            x, mc = cscan(mk_body(True), x,
+                          (params["moe_blocks"], cache["layers"]["moe"],
+                           wkv_m), name="moe_blocks")
+            layers = {"dense": dc, "moe": mc}
+        else:
+            moe = fam == "gqa_moe"
+            window, theta = self._layer_extras()
 
-        x, layers = cscan(body, x, (params["blocks"], cache["layers"],
-                                    window, theta), name="layers")
+            def body(xc, xs):
+                blk, kvc, w_, t_ = xs
+                y, kvc = _gqa_block_chunk(blk, xc, kvc, cur, n_new, cfg, pol,
+                                          window=w_, theta=t_, moe=moe)
+                return y, kvc
+
+            x, layers = cscan(body, x, (params["blocks"], cache["layers"],
+                                        window, theta), name="layers")
         h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
         last = jnp.clip(n_new - 1, 0, tokens.shape[1] - 1)
         h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
@@ -782,10 +820,13 @@ class LM:
         (tokens [B, gen_len], final cache).
         """
         tok0 = jnp.argmax(logits, -1).astype(jnp.int32)  # [B]
+        # step-invariant absorbed weights: computed once OUTSIDE the scan
+        # body, so the MLA kv_up dequant does not re-run every token
+        aux = self.absorbed_weights(params)
 
         def body(carry, _):
             cache, tok = carry
-            lg, cache = self.decode_step(params, cache, tok[:, None])
+            lg, cache = self.decode_step(params, cache, tok[:, None], aux=aux)
             return (cache, jnp.argmax(lg, -1).astype(jnp.int32)), tok
 
         (cache, last), toks = jax.lax.scan(

@@ -1,4 +1,5 @@
-"""Continuous-batching serving engine (slotted KV cache, in-flight
+"""Continuous-batching serving engine (slotted cache — per-head KV for
+gqa families, compressed latent + rope key for MLA — with in-flight
 batching, chunked prefill, per-request termination).
 
     from repro.serving import ContinuousEngine

@@ -17,10 +17,13 @@ deciding what each slot consumes:
     (finished slots idle on-device until the burst returns), amortizing
     the per-step dispatch that made the legacy loop slow (PR 1).
 
-For dense GQA families, token streams are identical for any
+For dense-attention families (gqa, and mla_moe's MLA layers — the
+slotted cache holds the compressed latent + rope key and attention runs
+absorbed in the rank space), token streams are identical for any
 ``prefill_chunk`` / ``decode_burst`` setting and identical to running
 each request alone through the static ``generate_scan`` path
-(tests/test_serving_engine.py).  For MoE (gqa_moe) the engine runs, but
+(tests/test_serving_engine.py, tests/test_serving_mla.py).  For MoE
+layers (gqa_moe, and deepseek-v3's routed layers) the engine runs, but
 finite expert capacity makes routing depend on batch composition —
 co-resident slots (and idle rows) compete for capacity, so per-request
 streams are NOT reproducible across batch mixes.  This is inherent to
@@ -41,14 +44,15 @@ import numpy as np
 from .scheduler import Request, Scheduler
 
 
-def _ragged_step(lm, params, cache, tokens, n_new):
+def _ragged_step(lm, params, aux, cache, tokens, n_new):
     # argmax in-graph: the host only needs next tokens, not [B, vocab]
     # logits (at real vocab sizes that transfer dominates the step)
-    logits, cache = lm.step_ragged(params, cache, tokens, n_new)
+    logits, cache = lm.step_ragged(params, cache, tokens, n_new, aux=aux)
     return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
 
-def _burst_steps(lm, params, cache, tok, remaining, eos, *, k_steps: int):
+def _burst_steps(lm, params, aux, cache, tok, remaining, eos, *,
+                 k_steps: int):
     """lax.scan of masked single-token ragged steps.  A slot whose
     remaining count hits 0 (max-len or EOS) stops consuming (n_new=0) so
     its cache and length freeze until the host evicts it."""
@@ -57,7 +61,7 @@ def _burst_steps(lm, params, cache, tok, remaining, eos, *, k_steps: int):
         cache, tok, remaining = carry
         active = remaining > 0
         logits, cache = lm.step_ragged(params, cache, tok[:, None],
-                                       active.astype(jnp.int32))
+                                       active.astype(jnp.int32), aux=aux)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         nxt = jnp.where(active, nxt, tok)
         emit = jnp.where(active, nxt, -1)
@@ -80,13 +84,21 @@ _JIT_BURST = jax.jit(_burst_steps, static_argnums=0,
 
 @dataclasses.dataclass
 class EngineStats:
-    """Aggregates one :meth:`ContinuousEngine.run`."""
+    """Aggregates one :meth:`ContinuousEngine.run`.
 
-    model_steps: int = 0      # single-token-equivalent model invocations
+    ``slot_steps`` / ``busy_slot_steps`` are counted in MODEL-STEP units
+    on every path: each dispatch that runs C model rows per slot adds
+    ``n_slots * C`` to ``slot_steps`` and the rows actually consumed
+    (``n_new.sum()``; one per active slot per fused burst step) to
+    ``busy_slot_steps`` — so ``occupancy`` is the fraction of computed
+    model rows that did useful work, comparable across the ragged and
+    burst paths (and against static batching's padded rows)."""
+
+    model_steps: int = 0      # model rows computed per slot (C per dispatch)
     dispatches: int = 0       # host->device program launches
     tokens_out: int = 0       # useful generated tokens
-    slot_steps: int = 0       # slots x decode-capable steps
-    busy_slot_steps: int = 0  # of those, slots that consumed a token
+    slot_steps: int = 0       # slots x model rows computed
+    busy_slot_steps: int = 0  # of those, rows a slot actually consumed
     seconds: float = 0.0
 
     @property
@@ -98,27 +110,49 @@ class EngineStats:
         return self.tokens_out / max(self.seconds, 1e-9)
 
 
+SLOTTED_FAMILIES = ("gqa", "gqa_moe", "mla_moe")
+
+
 class ContinuousEngine:
-    """Serve an LM with in-flight batching over a slotted KV cache.
+    """Serve an LM with in-flight batching over a slotted cache.
 
     ``n_slots`` concurrent requests share one cache of per-slot capacity
-    ``max_len`` (each request needs prompt + max_new <= max_len).  Only
-    gqa / gqa_moe families are supported (the families with a slotted KV
-    cache); recurrent-state families keep the static path.
+    ``max_len`` (each request needs prompt + max_new <= max_len).  The
+    slotted-cache families are supported — gqa / gqa_moe (per-head KV)
+    and mla_moe (DeepSeek-style compressed latent ``c`` + rope key
+    ``kr``, attention absorbed into the rank space); recurrent-state
+    families keep the static path.
+
+    For mla_moe the step-invariant absorbed weights (the dequantized
+    effective W_uk/W_uv of every layer's ``kv_up``) are computed ONCE at
+    construction and threaded through every jitted step as ``aux`` — the
+    dequant of a rank-512 up-projection per step per layer is pure waste
+    on the decode hot path.
+
+    ``decode_burst`` is clamped DOWN to a power of two at construction:
+    burst lengths follow the shortest active request rounded down to a
+    power of two, so a non-power-of-two cap (e.g. 6) would compile an
+    extra scan program alongside the k in {1, 2, 4} ladder it already
+    needs — the clamp keeps the compile-bound invariant of
+    O(log decode_burst) programs.
     """
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  prefill_chunk: int = 8, decode_burst: int = 8,
                  cache_dtype=jnp.float32):
-        if lm.cfg.family not in ("gqa", "gqa_moe"):
+        if lm.cfg.family not in SLOTTED_FAMILIES:
             raise NotImplementedError(
-                f"continuous engine needs a slotted KV cache; family "
+                f"continuous engine needs a slotted cache; family "
                 f"{lm.cfg.family!r} is not supported (use --engine static)")
         self.lm, self.params = lm, params
         self.n_slots, self.max_len = n_slots, max_len
         self.prefill_chunk = prefill_chunk
-        self.decode_burst = max(1, decode_burst)
+        db = max(1, decode_burst)
+        self.decode_burst = 1 << (db.bit_length() - 1)
         self.cache_dtype = cache_dtype
+        # step-invariant per-layer absorbed weights (None for gqa):
+        # dequantized once here, never inside the per-step jitted graph
+        self.aux = lm.absorbed_weights(params)
         self.reset()
 
     def reset(self):
@@ -168,8 +202,8 @@ class ContinuousEngine:
     def _run_ragged(self):
         """One mixed prefill/decode ragged step."""
         tokens, n_new = self.sched.plan()
-        nxt, self.cache = _JIT_STEP(self.lm, self.params, self.cache,
-                                    jnp.asarray(tokens),
+        nxt, self.cache = _JIT_STEP(self.lm, self.params, self.aux,
+                                    self.cache, jnp.asarray(tokens),
                                     jnp.asarray(n_new))
         nxt = np.asarray(nxt)
         # slots past their prompt after this plan emit one token each;
@@ -178,10 +212,13 @@ class ContinuousEngine:
                        if s is not None and n_new[i] > 0 and not s.prefilling)
         self.sched.commit(nxt)
         st = self.stats
+        c = int(tokens.shape[1])
         st.dispatches += 1
-        st.model_steps += int(tokens.shape[1])
-        st.slot_steps += self.n_slots
-        st.busy_slot_steps += int((n_new > 0).sum())
+        st.model_steps += c
+        # model-step units: this dispatch computed C rows for every slot,
+        # of which each slot consumed n_new (same units as _run_burst)
+        st.slot_steps += self.n_slots * c
+        st.busy_slot_steps += int(n_new.sum())
         st.tokens_out += emitting
 
     def _run_burst(self):
@@ -195,7 +232,7 @@ class ContinuousEngine:
         k_min = int(remaining[remaining > 0].min())
         k = int(min(self.decode_burst, 1 << (k_min.bit_length() - 1)))
         self.cache, tok_d, rem_d, emitted = _JIT_BURST(
-            self.lm, self.params, self.cache, jnp.asarray(tok),
+            self.lm, self.params, self.aux, self.cache, jnp.asarray(tok),
             jnp.asarray(remaining), jnp.asarray(eos), k_steps=k)
         emitted = np.asarray(emitted)
         self.sched.commit_burst(emitted, np.asarray(tok_d), np.asarray(rem_d))

@@ -24,6 +24,12 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
     Lengths are drawn round-robin (not sampled) so a trace is exactly
     reproducible and every length appears; token ids avoid 0..3 like the
     serve demo (reserved-ish ids)."""
+    if vocab <= 4:
+        # ids are drawn from [4, vocab): a tiny smoke vocab would make
+        # numpy raise a cryptic "low >= high" (or sample an empty range)
+        raise ValueError(
+            f"make_trace needs vocab > 4 (token ids are drawn from "
+            f"[4, vocab), skipping reserved-ish ids 0..3); got {vocab}")
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):

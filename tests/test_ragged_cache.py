@@ -70,6 +70,22 @@ def test_chunk_attention_c1_equals_decode_attention():
         np.testing.assert_allclose(np.asarray(a), np.asarray(c))
 
 
+def test_chunk_attention_fully_masked_rows_stay_finite():
+    """The engine's garbage-logits contract for n_new == 0 slots: a fully
+    masked row (qpos < 0) softmaxes an all-NEG_INF score row and must
+    come out garbage-but-FINITE — NaN would poison the whole batch
+    through the shared einsums."""
+    key = jax.random.PRNGKey(6)
+    b, s, h, kvh, d = 2, 8, 2, 1, 4
+    q = jax.random.normal(key, (b, 3, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    qpos = jnp.array([[-1, -1, -1], [0, 2, -1]])  # slot 0 fully idle
+    for window in (None, 4):
+        out = chunk_attention(q, k, v, qpos, window=window)
+        assert np.isfinite(np.asarray(out)).all()
+
+
 def test_chunk_attention_ignores_cache_beyond_qpos():
     """Entries past each row's position must not leak — stale KV from an
     evicted request changes nothing."""

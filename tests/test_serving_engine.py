@@ -97,6 +97,57 @@ def test_engine_eos_truncates_and_frees_slot(served):
 
 
 # ---------------------------------------------------------------------------
+# stats / construction invariants
+# ---------------------------------------------------------------------------
+
+
+def test_engine_decode_burst_clamped_to_power_of_two(served):
+    """The compile-bound invariant: burst lengths are powers of two, so a
+    non-power-of-two --decode-burst must clamp DOWN at construction (6
+    would otherwise compile a k=6 scan program alongside k in {1,2,4})."""
+    cfg, lm, merged = served
+    for asked, want in ((1, 1), (2, 2), (6, 4), (8, 8), (13, 8), (0, 1)):
+        eng = ContinuousEngine(lm, merged, n_slots=1, max_len=8,
+                               decode_burst=asked)
+        assert eng.decode_burst == want, (asked, want)
+
+
+def test_engine_occupancy_pinned_on_hand_computed_trace(served):
+    """EngineStats counts slot/busy steps in MODEL-STEP units on both the
+    ragged and burst paths.  Hand trace: slots=2, prefill_chunk=4,
+    requests (prompt 2, gen 2) and (prompt 4, gen 2).
+
+      step 1 (ragged, C=4): 2*4 = 8 slot rows, 2+4 = 6 consumed,
+                            both slots finish their prompt -> 2 tokens
+      step 2 (burst, k=1):  2*1 = 2 slot rows, 2 consumed, 2 tokens
+
+    -> slot_steps 10, busy 8, occupancy 0.8 (the old per-dispatch unit
+    on the ragged path would have claimed 4/4 = 100%)."""
+    cfg, lm, merged = served
+    eng = ContinuousEngine(lm, merged, n_slots=2, max_len=8,
+                           prefill_chunk=4, decode_burst=4)
+    eng.submit(np.arange(4, 6, dtype=np.int32), 2)
+    eng.submit(np.arange(4, 8, dtype=np.int32), 2)
+    out = eng.run()
+    assert sorted(len(v) for v in out.values()) == [2, 2]
+    st = eng.stats
+    assert (st.dispatches, st.model_steps) == (2, 5)
+    assert (st.slot_steps, st.busy_slot_steps) == (10, 8)
+    assert st.occupancy == pytest.approx(0.8)
+    assert st.tokens_out == 4
+
+
+def test_make_trace_rejects_tiny_vocab():
+    """vocab <= 4 would make rng.integers(4, vocab) crash (or sample an
+    empty range) deep inside numpy; fail loudly at the API instead."""
+    with pytest.raises(ValueError, match="vocab > 4"):
+        make_trace(2, 4)
+    with pytest.raises(ValueError, match="vocab > 4"):
+        make_trace(2, 3)
+    assert len(make_trace(2, 5)) == 2  # smallest legal vocab still works
+
+
+# ---------------------------------------------------------------------------
 # scheduler (host-side, no model)
 # ---------------------------------------------------------------------------
 
