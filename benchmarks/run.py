@@ -483,6 +483,26 @@ def engine_bench():
         "mla-", slots=2, prompt_len=4, long_gen=48, short_gen=2,
         n_requests=8, note="; deepseek-v3 reduced, compressed-KV cache")
 
+    # recurrent families through the unified SlotState ragged step:
+    # per-slot Mamba2/RWKV6 recurrences advance raggedly, eviction
+    # reinitializes them (SlotState.reset), and zamba2's shared
+    # attention blocks ride the slotted-KV chunk path.  Same
+    # mixed-trace shape as the mla row so the occupancy story is
+    # comparable (tests/test_serving_recurrent.py gates equivalence).
+    # (rwkv one notch larger: its per-token mix is so cheap at d128 that
+    # per-dispatch host overhead — which the engine pays more of — would
+    # swamp the slot-waste signal, as with the gqa row above)
+    _engine_compare(
+        C.reduced("rwkv6-7b", d_model=256, d_ff=512, n_layers=4),
+        "rwkv-", slots=2, prompt_len=4, long_gen=48, short_gen=2,
+        n_requests=8, note="; rwkv6 reduced, recurrent slot state")
+    _engine_compare(
+        C.reduced("zamba2-7b", d_model=128, d_ff=256, n_heads=8,
+                  n_kv_heads=2),
+        "zamba2-", slots=2, prompt_len=4, long_gen=48, short_gen=2,
+        n_requests=8,
+        note="; zamba2 reduced, hybrid mamba + shared-attn slot state")
+
 
 def roofline_summary():
     path = "experiments/roofline.json"

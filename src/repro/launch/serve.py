@@ -18,14 +18,19 @@ Engines (`--engine`):
               queued requests are admitted into free cache slots
               mid-flight, prompts prefill in chunks alongside decoding
               slots, and each request terminates at its own EOS/max-len
-              with immediate slot eviction + refill.  Serves the slotted
-              cache families: gqa / gqa_moe (per-head KV) and mla_moe
-              (deepseek-style compressed-KV, absorbed attention with the
-              effective W_uk/W_uv dequantized once up front).  Token
-              streams are identical to running each request alone
-              through the static path (tests/test_serving_engine.py,
-              tests/test_serving_mla.py; MoE layers carry the
-              capacity-routing caveat below).
+              with immediate slot eviction + refill.  Serves EVERY
+              family through the unified per-slot SlotState: gqa /
+              gqa_moe (per-head KV), mla_moe (deepseek-style
+              compressed-KV, absorbed attention with the effective
+              W_uk/W_uv dequantized once up front), mamba_hybrid / rwkv
+              (per-slot recurrences, reinitialized on eviction) and
+              encdec (frozen per-slot cross cache).  Token streams are
+              identical to running each request alone through the
+              static path (tests/test_serving_engine.py,
+              tests/test_serving_mla.py, tests/test_serving_recurrent.py,
+              tests/test_serving_encdec.py; MoE layers carry the
+              capacity-routing caveat below).  See the README
+              family-support matrix for the per-family state layout.
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
@@ -34,6 +39,8 @@ CPU demo:
       --engine continuous --requests 8 --slots 4 --gen-len 12
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b \
       --reduced --engine continuous --requests 6 --slots 2 --gen-len 6
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+      --engine continuous --requests 8 --slots 3 --gen-len 8
 """
 
 from __future__ import annotations
@@ -211,10 +218,20 @@ def main(argv=None):
             if args.gen_len < 1:
                 ap.error("--engine continuous needs --gen-len >= 1")
             slots = args.slots or min(4, b)
-            eng = ContinuousEngine(lm, merged, n_slots=slots,
-                                   max_len=max_len,
-                                   prefill_chunk=args.prefill_chunk,
-                                   decode_burst=args.decode_burst)
+            try:
+                eng = ContinuousEngine(lm, merged, n_slots=slots,
+                                       max_len=max_len,
+                                       prefill_chunk=args.prefill_chunk,
+                                       decode_burst=args.decode_burst)
+            except NotImplementedError:
+                # name the family and point at the docs instead of letting
+                # the bare engine-constructor error surface to a CLI user
+                ap.error(
+                    f"--engine continuous does not support the "
+                    f"{cfg.family!r} family (arch {cfg.name}); fall back "
+                    f"to --engine static, and see the family-support "
+                    f"matrix in README.md 'Serving engine' for what each "
+                    f"engine covers")
             rids = [eng.submit(prompts[i], args.gen_len)
                     for i in range(b)]
             outputs = eng.run()

@@ -2,4 +2,5 @@
 assigned architecture family, with QA-LoRA as a config switch."""
 
 from .common import QuantPolicy, FP  # noqa: F401
+from .slot_state import SlotState  # noqa: F401
 from .lm import LM  # noqa: F401

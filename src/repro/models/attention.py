@@ -297,16 +297,37 @@ def cross_kv(p, mem, cfg: AttnConfig, pol: QuantPolicy):
 
 def cross_apply(p, x, k_mem, v_mem, cfg: AttnConfig, pol: QuantPolicy,
                 chunk_q=256, chunk_k=1024):
-    """No rope, no causality: queries attend to the full encoder memory."""
+    """No rope, no causality: queries attend to the full encoder memory.
+    Single-token calls are the C=1 full-memory special case of
+    :func:`cross_chunk` (one copy of the cross decode math)."""
     b, s, _ = x.shape
-    q = linear_apply(p["wq"], x, pol).reshape(b, s, cfg.n_heads, cfg.head_dim)
     if s == 1:
-        o = decode_attention(q, k_mem, v_mem,
-                             jnp.full((b,), k_mem.shape[1], jnp.int32))
-    else:
-        o = flash_attention(q, k_mem, v_mem, causal=False,
-                            chunk_q=chunk_q, chunk_k=chunk_k)
+        return cross_chunk(p, x, k_mem, v_mem,
+                           jnp.full((b,), k_mem.shape[1], jnp.int32),
+                           cfg, pol)
+    q = linear_apply(p["wq"], x, pol).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    o = flash_attention(q, k_mem, v_mem, causal=False,
+                        chunk_q=chunk_q, chunk_k=chunk_k)
     return linear_apply(p["wo"], o.reshape(b, s, -1), pol)
+
+
+def cross_chunk(p, x, k_mem, v_mem, mem_len, cfg: AttnConfig,
+                pol: QuantPolicy):
+    """Ragged cross-attention against a per-slot frozen memory cache.
+
+    x: [B,C,d]; k_mem/v_mem: [B,Ss,KvH,hd] (the slotted cross cache,
+    written once at admission); mem_len: [B] valid source rows per slot.
+    Every query row of slot b attends to memory positions < mem_len[b] —
+    no rope, no causality, no dependence on the slot's decode position.
+    mem_len == 0 (a src-less slot) degenerates to a uniform average over
+    the slot's zeroed cross cache, i.e. a zero context — identical to
+    attending over an all-zero memory, which is what the static loop
+    path does."""
+    b, c, _ = x.shape
+    q = linear_apply(p["wq"], x, pol).reshape(b, c, cfg.n_heads, cfg.head_dim)
+    mem_pos = jnp.broadcast_to((mem_len - 1)[:, None], (b, c))
+    o = chunk_attention(q, k_mem, v_mem, mem_pos)
+    return linear_apply(p["wo"], o.reshape(b, c, -1), pol)
 
 
 # ---------------------------------------------------------------------------

@@ -32,42 +32,19 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import schemes
 from .common import QuantPolicy, linear_init, linear_apply, rmsnorm, rmsnorm_init, constrain
-from .attention import (AttnConfig, MLAConfig, _kv_up_split, gqa_init,
-                        gqa_apply, gqa_decode, gqa_init_cache,
+from .attention import (_kv_up_split, gqa_init, gqa_apply,
                         gqa_prefill_chunk, mla_init, mla_apply,
-                        mla_init_cache, mla_prefill_chunk, cross_init,
-                        cross_kv, cross_apply)
+                        mla_prefill_chunk, cross_init, cross_kv,
+                        cross_apply, cross_chunk)
 from .mlp import mlp_init, mlp_apply
 from .moe import moe_init, moe_apply
-from .ssm import (Mamba2Config, RWKV6Config, mamba2_init, mamba2_mix,
-                  mamba2_decode, mamba2_init_state, rwkv6_init,
-                  rwkv6_time_mix, rwkv6_channel_mix, rwkv6_decode_time_mix,
-                  rwkv6_init_state)
+from .ssm import (mamba2_init, mamba2_mix, mamba2_chunk_step, rwkv6_init,
+                  rwkv6_time_mix, rwkv6_channel_mix, rwkv6_time_mix_ragged,
+                  rwkv6_channel_mix_ragged)
+from .slot_state import (SlotState, attn_cfg as _attn_cfg,
+                         mla_cfg as _mla_cfg, mamba_cfg as _mamba_cfg,
+                         rwkv_cfg as _rwkv_cfg, hybrid_layout)
 from .scan_utils import cscan
-
-
-def _attn_cfg(cfg: ArchConfig) -> AttnConfig:
-    return AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
-                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                      rope_theta=cfg.rope_theta, window=cfg.window,
-                      qk_norm=cfg.qk_norm)
-
-
-def _mla_cfg(cfg: ArchConfig) -> MLAConfig:
-    return MLAConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
-                     q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
-                     qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
-                     v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta)
-
-
-def _mamba_cfg(cfg: ArchConfig) -> Mamba2Config:
-    return Mamba2Config(d_model=cfg.d_model, ssm_state=cfg.ssm_state,
-                        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
-
-
-def _rwkv_cfg(cfg: ArchConfig) -> RWKV6Config:
-    return RWKV6Config(d_model=cfg.d_model, d_ff=cfg.d_ff,
-                       head_dim=cfg.ssm_head_dim or 64, chunk=cfg.ssm_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -108,14 +85,6 @@ def _gqa_block(p, x, cfg: ArchConfig, pol, *, window=None, theta=None,
     else:
         m = mlp_apply(p["mlp"], h, pol, cfg.act)
     return x + m, kv, aux
-
-
-def _gqa_block_decode(p, x, cache, cur_len, cfg: ArchConfig, pol, *,
-                      window=None, theta=None, moe=False):
-    """One-token decode == the C=1 always-active chunk step (kept as a
-    named entry point for the static/encdec/hybrid paths)."""
-    return _gqa_block_chunk(p, x, cache, cur_len, jnp.ones_like(cur_len),
-                            cfg, pol, window=window, theta=theta, moe=moe)
 
 
 def _gqa_block_chunk(p, x, cache, cur_len, n_new, cfg: ArchConfig, pol, *,
@@ -300,11 +269,7 @@ class LM:
         return params
 
     def _hybrid_layout(self):
-        cfg = self.cfg
-        per = cfg.attn_every - 1          # mamba blocks per group
-        n_groups = cfg.n_layers // cfg.attn_every
-        tail = cfg.n_layers - n_groups * cfg.attn_every
-        return n_groups, per, tail
+        return hybrid_layout(self.cfg)
 
     def _enc_block_init(self, key, pol):
         cfg = self.cfg
@@ -533,6 +498,23 @@ class LM:
         x, caches = cscan(body, x, params["dec_blocks"], name="dec_layers")
         return x, caches
 
+    def encode_cross(self, params, src):
+        """Run the encoder over ``src`` [B,Ss,d] and precompute every
+        decoder layer's cross K/V from the memory: returns (k, v), each
+        [L,B,Ss,KvH,hd].  The continuous engine calls this ONCE per
+        admitted encdec request and pins the result into the slot's
+        frozen cross cache — cross K/V never recompute during decode."""
+        cfg, pol = self.cfg, self.cfg.quant
+        memory = self._encode(params, src)
+
+        def body(carry, blk):
+            km, vm = cross_kv(blk["cross"], memory, _attn_cfg(cfg), pol)
+            return carry, (km, vm)
+
+        _, (ks, vs) = cscan(body, jnp.float32(0.0), params["dec_blocks"],
+                            name="cross_kv")
+        return ks, vs
+
     # ---------------- public API ----------------
 
     def loss(self, params, batch):
@@ -576,8 +558,13 @@ class LM:
             memory = self._encode(params, batch["src"])
             x = self._embed(params, batch["tokens"])
             h, caches = self._decode_trunk(params, x, memory, collect_cache=True)
+            # cross "len" records the true memory length so decode masks
+            # exactly the rows the prefill attention saw (the decode cache
+            # zero-pads cross beyond it; see merge_prefill_cache)
+            src_len = jnp.full((x.shape[0],), memory.shape[1], jnp.int32)
             cache = {"self": {"k": caches[0][0], "v": caches[0][1]},
-                     "cross": {"k": caches[1][0], "v": caches[1][1]}}
+                     "cross": {"k": caches[1][0], "v": caches[1][1],
+                               "len": src_len}}
         else:
             x = self._inputs_to_x(params, batch)
             h, _, cache = self._trunk(params, x, collect_cache=True)
@@ -589,116 +576,35 @@ class LM:
         length = jnp.full((h.shape[0],), seq, jnp.int32)
         return logits, {"layers": cache, "len": length}
 
+    def slot_state(self) -> SlotState:
+        """The per-slot decode-state layout/lifecycle for this config
+        (init / snapshot / reset / advance; see models/slot_state.py)."""
+        return SlotState(self.cfg)
+
+    def supports_ragged(self) -> bool:
+        """True when :meth:`step_ragged` covers ``cfg.family`` — the
+        single source of truth the continuous engine's family guard
+        derives from (no separate supported-families constant to drift)."""
+        return self.cfg.family in ("gqa", "gqa_moe", "mla_moe",
+                                   "mamba_hybrid", "rwkv", "encdec")
+
     def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
-        cfg = self.cfg
-        L, d = cfg.n_layers, cfg.d_model
-        fam = cfg.family
-        kv = lambda n, s: {"k": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
-                           "v": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)}
-        if fam in ("gqa", "gqa_moe"):
-            layers = kv(L, seq)
-        elif fam == "mla_moe":
-            nd = cfg.n_dense_layers
-            mk = lambda n: {"c": jnp.zeros((n, batch, seq, cfg.kv_lora_rank), dtype),
-                            "kr": jnp.zeros((n, batch, seq, cfg.qk_rope_dim), dtype)}
-            layers = {"dense": mk(nd), "moe": mk(L - nd)}
-        elif fam == "mamba_hybrid":
-            ng, per, tail = self._hybrid_layout()
-            mcfg = _mamba_cfg(cfg)
-            st = lambda: mamba2_init_state(batch, mcfg)
-            layers = {
-                "groups": jax.tree.map(
-                    lambda a: jnp.broadcast_to(a, (ng, per) + a.shape), st()),
-                "tail": jax.tree.map(
-                    lambda a: jnp.broadcast_to(a, (tail,) + a.shape), st()),
-                **kv(ng, seq),
-            }
-        elif fam == "rwkv":
-            rcfg = _rwkv_cfg(cfg)
-            st = rwkv6_init_state(batch, rcfg, dtype=self.cfg.quant.dtype)
-            layers = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), st)
-        elif fam == "encdec":
-            src = int(seq * cfg.source_frac)
-            tgt = seq - src
-            layers = {"self": kv(L, tgt), "cross": kv(L, src)}
-        else:
-            raise ValueError(fam)
-        return {"layers": layers, "len": jnp.zeros((batch,), jnp.int32)}
+        """Fresh decode cache (see :class:`SlotState` for the layout and
+        the eviction/reset contract).  For encdec, ``seq`` is split into
+        source/target capacities via ``cfg.source_frac`` (the engine
+        passes an explicit ``src_cap`` through :meth:`slot_state`)."""
+        return self.slot_state().init(batch, seq, dtype=dtype)
 
     def decode_step(self, params, cache, tokens, aux=None):
-        """tokens: [B,1] -> (logits [B,V], updated cache). One serve step.
+        """tokens: [B,1] -> (logits [B,V], updated cache). One serve step:
+        the C=1 always-active special case of :meth:`step_ragged` for
+        EVERY family — one implementation of the decode math, so the
+        static and continuous engines cannot silently diverge.
 
         ``aux`` optionally carries :meth:`absorbed_weights` output so the
         MLA absorbed-weight dequant stays out of the per-step graph."""
-        cfg, pol = self.cfg, self.cfg.quant
-        fam = cfg.family
-        if fam in ("gqa", "gqa_moe", "mla_moe"):
-            # the C=1 always-active special case of the ragged serve step
-            # — ONE implementation of the decode math, so the static and
-            # continuous engines cannot silently diverge
-            return self.step_ragged(params, cache, tokens,
-                                    jnp.ones_like(cache["len"]), aux=aux)
-        cur = cache["len"]
-        x = self._embed(params, tokens)
-        layers = cache["layers"]
-
-        if fam == "mamba_hybrid":
-            mcfg = _mamba_cfg(cfg)
-            shared = params["shared_attn"]
-
-            def mamba_body(xc, xs):
-                blk, st = xs
-                y, st = mamba2_decode(blk, xc, st, mcfg, pol)
-                return xc + y, st
-
-            def group_body(xc, xs):
-                gblk, gst, kvc = xs
-                xc, gst = cscan(mamba_body, xc, (gblk, gst), name="mamba_inner")
-                y, kvc = _gqa_block_decode(shared, xc, kvc, cur, cfg, pol)
-                return y, (gst, kvc)
-
-            x, (gstates, kvs) = cscan(
-                group_body, x,
-                (params["mamba_groups"], layers["groups"],
-                 {"k": layers["k"], "v": layers["v"]}), name="groups")
-            x, tstates = cscan(mamba_body, x,
-                               (params["mamba_tail"], layers["tail"]),
-                               name="mamba_tail")
-            layers = {"groups": gstates, "tail": tstates,
-                      "k": kvs["k"], "v": kvs["v"]}
-        elif fam == "rwkv":
-            rcfg = _rwkv_cfg(cfg)
-
-            def body(xc, xs):
-                blk, st = xs
-                y, (tp, wkv) = rwkv6_decode_time_mix(
-                    blk["mix"], rmsnorm(blk["ln1"], xc),
-                    (st["tm_prev"], st["wkv"]), rcfg, pol)
-                xc = xc + y
-                y, cp = rwkv6_channel_mix(blk["mix"], rmsnorm(blk["ln2"], xc),
-                                          rcfg, pol, prev=st["cm_prev"])
-                return xc + y, {"tm_prev": tp, "wkv": wkv, "cm_prev": cp}
-
-            x, layers = cscan(body, x, (params["blocks"], layers), name="layers")
-        elif fam == "encdec":
-            def body(xc, xs):
-                blk, selfc, crossc = xs
-                a, selfc = gqa_decode(blk["attn"], rmsnorm(blk["ln1"], xc),
-                                      selfc, cur, _attn_cfg(cfg), pol)
-                xc = xc + a
-                xc = xc + cross_apply(blk["cross"], rmsnorm(blk["ln2"], xc),
-                                      crossc["k"], crossc["v"], _attn_cfg(cfg), pol)
-                xc = xc + mlp_apply(blk["mlp"], rmsnorm(blk["ln3"], xc), pol, cfg.act)
-                return xc, selfc
-            x, selfc = cscan(body, x, (params["dec_blocks"], layers["self"],
-                                       layers["cross"]), name="dec_layers")
-            layers = {"self": selfc, "cross": layers["cross"]}
-        else:
-            raise ValueError(fam)
-
-        h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
-        logits = self._logits(params, h)[:, 0]
-        return logits, {"layers": layers, "len": cur + 1}
+        return self.step_ragged(params, cache, tokens,
+                                jnp.ones_like(cache["len"]), aux=aux)
 
     def absorbed_weights(self, params):
         """Precompute the per-layer effective (adapter-merged, dequantized)
@@ -717,16 +623,24 @@ class LM:
                 "moe": _kv_up_split(params["moe_blocks"]["attn"], mcfg, dt)}
 
     def step_ragged(self, params, cache, tokens, n_new, aux=None):
-        """Ragged serve step for continuous batching (gqa / gqa_moe /
-        mla_moe — the slotted-cache families).
+        """Ragged serve step for continuous batching — every family.
 
         ``tokens`` [B, C] int32, ``n_new`` [B] in [0, C]: slot b consumes
         ``tokens[b, :n_new[b]]`` at positions ``len[b]..len[b]+n_new[b]-1``
-        of its private cache region and advances only by ``n_new[b]``.
+        of its private slot state and advances only by ``n_new[b]``.
         One compiled program therefore serves any mix of slot states —
         chunked prefill (n_new == C), in-flight decode (n_new == 1) and
-        free/finished slots (n_new == 0, cache and length untouched) —
+        free/finished slots (n_new == 0, state and length untouched) —
         which is what lets the engine admit requests mid-flight.
+
+        Per-slot state follows the family (:class:`SlotState`): slotted
+        KV for gqa/gqa_moe, slotted compressed latent + rope key for
+        mla_moe, running Mamba2/RWKV6 recurrences for mamba_hybrid/rwkv
+        (masked rows are IDENTITY in the recurrence, so idle slots freeze
+        bit-exactly; the hybrid family's shared-attention blocks ride the
+        slotted-KV chunk path), and for encdec a slotted self-KV plus a
+        frozen per-slot cross cache written at admission (masked to each
+        slot's own cross ``len``).
 
         ``aux`` optionally carries :meth:`absorbed_weights` output; when
         given, the MLA absorbed-weight dequant stays OUT of this graph.
@@ -743,10 +657,10 @@ class LM:
         """
         cfg, pol = self.cfg, self.cfg.quant
         fam = cfg.family
-        if fam not in ("gqa", "gqa_moe", "mla_moe"):
+        if not self.supports_ragged():
             raise NotImplementedError(
-                f"step_ragged supports the slotted-cache families "
-                f"(gqa/gqa_moe/mla_moe), not {fam!r}")
+                f"step_ragged has no {fam!r} support "
+                f"(LM.supports_ragged() is False)")
         cur = cache["len"]
         n_new = n_new.astype(jnp.int32)
         x = self._embed(params, tokens)
@@ -768,6 +682,76 @@ class LM:
                           (params["moe_blocks"], cache["layers"]["moe"],
                            wkv_m), name="moe_blocks")
             layers = {"dense": dc, "moe": mc}
+        elif fam == "mamba_hybrid":
+            mcfg = _mamba_cfg(cfg)
+            shared = params["shared_attn"]
+            lay = cache["layers"]
+
+            def mamba_body(xc, xs):
+                blk, st = xs
+                y, st = mamba2_chunk_step(blk, xc, st, n_new, mcfg, pol)
+                return xc + y, st
+
+            def group_body(xc, xs):
+                gblk, gst, kvc = xs
+                xc, gst = cscan(mamba_body, xc, (gblk, gst),
+                                name="mamba_inner")
+                y, kvc = _gqa_block_chunk(shared, xc, kvc, cur, n_new,
+                                          cfg, pol)
+                return y, (gst, kvc)
+
+            x, (gstates, kvs) = cscan(
+                group_body, x,
+                (params["mamba_groups"], lay["groups"],
+                 {"k": lay["k"], "v": lay["v"]}), name="groups")
+            x, tstates = cscan(mamba_body, x,
+                               (params["mamba_tail"], lay["tail"]),
+                               name="mamba_tail")
+            layers = {"groups": gstates, "tail": tstates,
+                      "k": kvs["k"], "v": kvs["v"]}
+        elif fam == "rwkv":
+            rcfg = _rwkv_cfg(cfg)
+
+            def body(xc, xs):
+                blk, st = xs
+                y, (tp, wkv) = rwkv6_time_mix_ragged(
+                    blk["mix"], rmsnorm(blk["ln1"], xc),
+                    (st["tm_prev"], st["wkv"]), n_new, rcfg, pol)
+                xc = xc + y
+                y, cp = rwkv6_channel_mix_ragged(
+                    blk["mix"], rmsnorm(blk["ln2"], xc), st["cm_prev"],
+                    n_new, rcfg, pol)
+                return xc + y, {"tm_prev": tp, "wkv": wkv, "cm_prev": cp}
+
+            x, layers = cscan(body, x, (params["blocks"], cache["layers"]),
+                              name="layers")
+        elif fam == "encdec":
+            acfg = _attn_cfg(cfg)
+            crossc = cache["layers"]["cross"]
+            # legacy caches without a cross "len" behave as before:
+            # every memory row (zero-padded or not) is attended
+            clen = crossc.get("len")
+            if clen is None:
+                clen = jnp.full((x.shape[0],), crossc["k"].shape[2],
+                                jnp.int32)
+
+            def body(xc, xs):
+                blk, selfc, ck, cv = xs
+                a, selfc = gqa_prefill_chunk(
+                    blk["attn"], rmsnorm(blk["ln1"], xc), selfc, cur,
+                    n_new, acfg, pol)
+                xc = xc + a
+                xc = xc + cross_chunk(blk["cross"],
+                                      rmsnorm(blk["ln2"], xc), ck, cv,
+                                      clen, acfg, pol)
+                xc = xc + mlp_apply(blk["mlp"], rmsnorm(blk["ln3"], xc),
+                                    pol, cfg.act)
+                return xc, selfc
+
+            x, selfc = cscan(body, x,
+                             (params["dec_blocks"], cache["layers"]["self"],
+                              crossc["k"], crossc["v"]), name="dec_layers")
+            layers = {"self": selfc, "cross": crossc}
         else:
             moe = fam == "gqa_moe"
             window, theta = self._layer_extras()
@@ -784,7 +768,7 @@ class LM:
         last = jnp.clip(n_new - 1, 0, tokens.shape[1] - 1)
         h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
         logits = self._logits(params, h_last)[:, 0]
-        return logits, {"layers": layers, "len": cur + n_new}
+        return logits, self.slot_state().advance(cache, layers, n_new)
 
     # ---------------- serving: prefill + scan decode ----------------
 

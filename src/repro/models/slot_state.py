@@ -1,0 +1,255 @@
+"""Unified per-slot decode state: one layout/lifecycle abstraction for
+every model family's serving cache.
+
+Each family carries cross-token decode state in a different shape —
+slotted KV (gqa), slotted compressed latent + rope key (mla_moe), running
+Mamba2/RWKV6 recurrences (mamba_hybrid, rwkv), and a frozen per-slot
+cross-attention cache (encdec).  The continuous-batching engine must
+treat all of them uniformly: admit a request into a slot, step it, evict
+it, and refill the slot without the next occupant ever observing the
+previous one.  :class:`SlotState` is that contract.  Every leaf of a
+decode cache is one of three kinds:
+
+``cache``
+    Length-indexed storage (KV / compressed-KV): rows beyond the slot's
+    own ``len`` are provably never read (every attention mask is bounded
+    by the slot's length), so eviction is O(1) metadata — the stale rows
+    stay in place and are simply masked out.
+``state``
+    Per-slot snapshot state that is *always* live (Mamba2 ``conv``/``ssm``,
+    RWKV6 ``tm_prev``/``wkv``/``cm_prev``, the encdec cross cache): there
+    is no length to mask by, so :meth:`SlotState.reset` must physically
+    reinitialize it (all states initialize to zeros) or the next occupant
+    inherits the evicted request's recurrence.
+``len``
+    Per-slot valid-length counters (the top-level ``len``, and the encdec
+    cross ``len``): reset to 0 on eviction.
+
+Lifecycle:
+
+    ss = lm.slot_state()
+    cache = ss.init(n_slots, max_len, dtype)      # == LM.init_cache
+    cache = ss.reset(cache, slot_mask)            # evict: state->0, len->0
+    one   = ss.snapshot(cache, slot)              # slot-local view (tests)
+    cache = ss.advance(cache, new_layers, n_new)  # step: bump lengths
+
+``LM.init_cache`` delegates here, ``LM.step_ragged`` advances through
+here, and the engine evicts through here — so adding a family means
+adding its layout in exactly one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .attention import AttnConfig, MLAConfig
+from .ssm import Mamba2Config, RWKV6Config
+
+CACHE, STATE, LEN = "cache", "state", "len"
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig -> per-family sub-configs (single source of truth; lm.py
+# imports these)
+# ---------------------------------------------------------------------------
+
+
+def attn_cfg(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                      rope_theta=cfg.rope_theta, window=cfg.window,
+                      qk_norm=cfg.qk_norm)
+
+
+def mla_cfg(cfg: ArchConfig) -> MLAConfig:
+    return MLAConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                     q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+                     qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+                     v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta)
+
+
+def mamba_cfg(cfg: ArchConfig) -> Mamba2Config:
+    return Mamba2Config(d_model=cfg.d_model, ssm_state=cfg.ssm_state,
+                        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def rwkv_cfg(cfg: ArchConfig) -> RWKV6Config:
+    return RWKV6Config(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       head_dim=cfg.ssm_head_dim or 64, chunk=cfg.ssm_chunk)
+
+
+def hybrid_layout(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_groups, mamba-per-group, tail) for the mamba_hybrid stack."""
+    per = cfg.attn_every - 1
+    n_groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - n_groups * cfg.attn_every
+    return n_groups, per, tail
+
+
+# ---------------------------------------------------------------------------
+# layout spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotLeaf:
+    """One leaf of a decode cache: full shape (slot axis included), which
+    axis indexes slots, lifecycle kind, and dtype (None = the ``init``
+    call's cache dtype)."""
+
+    shape: Tuple[int, ...]
+    slot_axis: int
+    kind: str              # CACHE | STATE | LEN
+    dtype: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotState:
+    """Family-agnostic per-slot decode-state lifecycle for one ArchConfig.
+
+    Hashable (frozen dataclass over the frozen ArchConfig) so jitted
+    engine helpers can take it as a static argument."""
+
+    cfg: ArchConfig
+
+    # ---------------- layout ----------------
+
+    def layout(self, n_slots: int, max_len: int,
+               src_cap: int = 0) -> dict:
+        """Pytree of :class:`SlotLeaf` mirroring the cache structure.
+
+        ``max_len`` is the per-slot token capacity (for encdec: the
+        decoder-side capacity; ``src_cap`` is the frozen cross-cache
+        capacity, only meaningful there)."""
+        cfg = self.cfg
+        B, S, L = n_slots, max_len, cfg.n_layers
+
+        def kv(n, s, kind=CACHE):
+            shape = (n, B, s, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": SlotLeaf(shape, 1, kind),
+                    "v": SlotLeaf(shape, 1, kind)}
+
+        fam = cfg.family
+        if fam in ("gqa", "gqa_moe"):
+            layers = kv(L, S)
+        elif fam == "mla_moe":
+            nd = cfg.n_dense_layers
+
+            def mk(n):
+                return {"c": SlotLeaf((n, B, S, cfg.kv_lora_rank), 1, CACHE),
+                        "kr": SlotLeaf((n, B, S, cfg.qk_rope_dim), 1, CACHE)}
+
+            layers = {"dense": mk(nd), "moe": mk(L - nd)}
+        elif fam == "mamba_hybrid":
+            ng, per, tail = hybrid_layout(cfg)
+            mcfg = mamba_cfg(cfg)
+
+            def mamba_state(lead):
+                ax = len(lead) + 0  # slot axis right after the stack dims
+                return {"conv": SlotLeaf(
+                            lead + (B, mcfg.conv_width - 1, mcfg.conv_dim),
+                            ax, STATE, jnp.float32),
+                        "ssm": SlotLeaf(
+                            lead + (B, mcfg.n_heads, mcfg.head_dim,
+                                    mcfg.ssm_state),
+                            ax, STATE, jnp.float32)}
+
+            layers = {"groups": mamba_state((ng, per)),
+                      "tail": mamba_state((tail,)),
+                      **kv(ng, S)}
+        elif fam == "rwkv":
+            rcfg = rwkv_cfg(cfg)
+            sd = cfg.quant.dtype
+            layers = {
+                "tm_prev": SlotLeaf((L, B, 1, cfg.d_model), 1, STATE, sd),
+                "wkv": SlotLeaf((L, B, rcfg.n_heads, rcfg.head_dim,
+                                 rcfg.head_dim), 1, STATE, jnp.float32),
+                "cm_prev": SlotLeaf((L, B, 1, cfg.d_model), 1, STATE, sd),
+            }
+        elif fam == "encdec":
+            # the cross cache is STATE, not CACHE: it is filled once at
+            # admission (frozen per slot) and has no per-row mask of its
+            # own beyond cross "len", so reset must zero it — a refilled
+            # slot serving a src-less request would otherwise average
+            # the previous occupant's stale cross K/V.
+            layers = {"self": kv(L, S),
+                      "cross": {**kv(L, src_cap, STATE),
+                                "len": SlotLeaf((B,), 0, LEN, jnp.int32)}}
+        else:
+            raise ValueError(fam)
+        return {"layers": layers,
+                "len": SlotLeaf((B,), 0, LEN, jnp.int32)}
+
+    def _dims(self, cache) -> Tuple[int, int, int]:
+        """Recover (n_slots, max_len, src_cap) from a concrete cache."""
+        cfg = self.cfg
+        n_slots = cache["len"].shape[0]
+        fam = cfg.family
+        lay = cache["layers"]
+        if fam in ("gqa", "gqa_moe", "mamba_hybrid"):
+            return n_slots, lay["k"].shape[2], 0
+        if fam == "mla_moe":
+            return n_slots, lay["dense"]["c"].shape[2], 0
+        if fam == "rwkv":
+            return n_slots, 0, 0  # no length-indexed cache
+        if fam == "encdec":
+            return (n_slots, lay["self"]["k"].shape[2],
+                    lay["cross"]["k"].shape[2])
+        raise ValueError(fam)
+
+    # ---------------- lifecycle ----------------
+
+    def init(self, n_slots: int, max_len: int, dtype=jnp.bfloat16,
+             src_cap: Optional[int] = None) -> dict:
+        """Fresh all-slots-empty decode cache.
+
+        For encdec, ``max_len`` keeps the legacy :meth:`LM.init_cache`
+        meaning when ``src_cap`` is None — it is split into source/target
+        capacities via ``cfg.source_frac`` — while an explicit ``src_cap``
+        makes ``max_len`` the decoder-side capacity outright (what the
+        engine wants: the scheduler guards prompt + gen <= max_len)."""
+        if self.cfg.family == "encdec" and src_cap is None:
+            src_cap = int(max_len * self.cfg.source_frac)
+            max_len = max_len - src_cap
+        spec = self.layout(n_slots, max_len, src_cap or 0)
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype if s.dtype is not None
+                                else dtype), spec)
+
+    def reset(self, cache, slot_mask) -> dict:
+        """Evict the masked slots: lengths -> 0 and snapshot state -> its
+        init value (zeros); length-indexed cache rows are left in place
+        (masked by the slot's own length, never read).  ``slot_mask`` is
+        a [n_slots] bool vector — one batched update for any number of
+        simultaneous evictions."""
+        spec = self.layout(*self._dims(cache))
+        mask = jnp.asarray(slot_mask).astype(bool)
+
+        def one(s, x):
+            if s.kind == CACHE:
+                return x
+            bshape = [1] * x.ndim
+            bshape[s.slot_axis] = mask.shape[0]
+            return jnp.where(mask.reshape(bshape), jnp.zeros_like(x), x)
+
+        return jax.tree.map(one, spec, cache)
+
+    def snapshot(self, cache, slot: int) -> dict:
+        """One slot's private view of the cache (its state leaves, its
+        cache rows, its lengths) — the slot axis is indexed out of every
+        leaf."""
+        spec = self.layout(*self._dims(cache))
+        return jax.tree.map(
+            lambda s, x: jnp.take(x, jnp.asarray(slot), axis=s.slot_axis),
+            spec, cache)
+
+    def advance(self, cache, layers, n_new) -> dict:
+        """Fold a step's updated layer state back in, advancing each
+        slot's length by the rows it consumed."""
+        return {"layers": layers,
+                "len": cache["len"] + jnp.asarray(n_new, jnp.int32)}

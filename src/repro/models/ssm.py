@@ -154,6 +154,56 @@ def mamba2_mix(p, x, cfg: Mamba2Config, pol: QuantPolicy, return_state=False):
     return out
 
 
+def mamba2_chunk_step(p, x, state, n_new, cfg: Mamba2Config, pol: QuantPolicy):
+    """Ragged chunk step: x [B,C,d]; slot b consumes rows [:n_new[b]],
+    advancing its (conv, ssm) recurrence by exactly n_new[b] tokens.
+
+    The serving analogue of :func:`attention.gqa_prefill_chunk` for a
+    recurrence instead of a cache: masked rows (i >= n_new[b]) are made
+    IDENTITY in the recurrence — their decay is forced to 1 (loga = 0)
+    and their input contribution to 0 (u = 0) — so a chunk where slot b
+    consumes nothing leaves its state bit-exactly unchanged, and one
+    compiled program covers chunked prefill (n_new == C), decode
+    (n_new == 1) and frozen idle slots (n_new == 0).  Outputs on masked
+    rows are garbage (callers never read them).  C == 1 always-active
+    reproduces :func:`mamba2_decode`'s math.
+    """
+    b, c, _ = x.shape
+    n_new = n_new.astype(jnp.int32)
+    valid = jnp.arange(c)[None, :] < n_new[:, None]            # [B, C]
+    h = linear_apply(p["in_proj"], x, pol)
+    z, xbc, dt_raw = _split_in_proj(h, cfg)
+    # depthwise causal conv over [carried window | chunk]: output row i
+    # sees cat positions i..i+W-1; valid rows only look at the carried
+    # window and earlier valid rows (garbage rows sit AFTER them)
+    width = cfg.conv_width
+    cat = jnp.concatenate([state["conv"].astype(jnp.float32),
+                           xbc.astype(jnp.float32)], axis=1)   # [B,W-1+C,Cv]
+    conv = sum(cat[:, i:i + c, :] * p["conv_w"][i][None, None, :]
+               for i in range(width))
+    conv = jax.nn.silu(conv + p["conv_b"][None, None, :])
+    xin = conv[..., : cfg.d_inner]
+    bmat = conv[..., cfg.d_inner : cfg.d_inner + cfg.ssm_state]
+    cmat = conv[..., cfg.d_inner + cfg.ssm_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,C,H]
+    loga = dt * (-jnp.exp(p["a_log"]))[None, None, :]
+    loga = jnp.where(valid[..., None], loga, 0.0)       # masked: decay 1
+    xh = xin.reshape(b, c, cfg.n_heads, cfg.head_dim)
+    u = xh * dt[..., None]
+    u = jnp.where(valid[..., None, None], u, 0.0)       # masked: no input
+    ssm, y = _ssd_chunk(state["ssm"].astype(jnp.float32),
+                        (u, bmat, cmat, loga), cfg)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, c, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = linear_apply(p["out_proj"], y, pol)
+    # new window = the last W-1 *valid* inputs: cat positions
+    # n_new[b]..n_new[b]+W-2 (n_new == 0 keeps the old window verbatim)
+    idx = n_new[:, None] + jnp.arange(width - 1)[None, :]      # [B, W-1]
+    new_conv = jnp.take_along_axis(cat, idx[..., None], axis=1)
+    return out, {"conv": new_conv, "ssm": ssm}
+
+
 def mamba2_init_state(batch: int, cfg: Mamba2Config, dtype=jnp.float32):
     return {
         "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
@@ -327,6 +377,57 @@ def rwkv6_decode_time_mix(p, x, state, cfg: RWKV6Config, pol: QuantPolicy):
     y = y.reshape(b, 1, -1).astype(x.dtype)
     y = rmsnorm(p["ln_x"], y) * jax.nn.silu(g)
     return linear_apply(p["wo"], y, pol), (x, s_new)
+
+
+def _ragged_prev(prev, x, n_new):
+    """New token-shift carry after a ragged chunk: row x[b, n_new[b]-1]
+    (the last VALID row), or the old ``prev`` when n_new[b] == 0."""
+    cat = jnp.concatenate([prev.astype(x.dtype), x], axis=1)   # [B,1+C,d]
+    return jnp.take_along_axis(cat, n_new[:, None, None].astype(jnp.int32),
+                               axis=1)
+
+
+def rwkv6_time_mix_ragged(p, x, state, n_new, cfg: RWKV6Config,
+                          pol: QuantPolicy):
+    """Ragged chunk time-mix: x [B,C,d]; slot b consumes rows [:n_new[b]],
+    advancing its (prev_x, wkv) state by exactly n_new[b] tokens.
+
+    Masked rows are identity in the WKV recurrence — decay forced to 1
+    (logw = 0) and key contribution to 0 (k = 0) — so idle slots
+    (n_new == 0) keep their state bit-exactly while active slots prefill
+    or decode in the same compiled program.  Masked-row outputs are
+    garbage (never read).  C == 1 always-active reproduces
+    :func:`rwkv6_decode_time_mix`'s math.
+    """
+    prev, s0 = state
+    b, c, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    n_new = n_new.astype(jnp.int32)
+    valid = jnp.arange(c)[None, :] < n_new[:, None]            # [B, C]
+    xp = _shift(x, prev.astype(x.dtype))
+    mix = lambda i: x + p["mu"][i][None, None, :].astype(x.dtype) * (xp - x)
+    r = linear_apply(p["wr"], mix(0), pol).reshape(b, c, h, hd).astype(jnp.float32)
+    k = linear_apply(p["wk"], mix(1), pol).reshape(b, c, h, hd).astype(jnp.float32)
+    v = linear_apply(p["wv"], mix(2), pol).reshape(b, c, h, hd).astype(jnp.float32)
+    g = linear_apply(p["wg"], mix(3), pol)
+    wx = mix(4).astype(jnp.float32)
+    dec = p["w0"] + jnp.tanh(wx @ p["w1"]) @ p["w2"]
+    logw = -jnp.exp(dec).reshape(b, c, h, hd)
+    logw = jnp.where(valid[..., None, None], logw, 0.0)  # masked: decay 1
+    k = jnp.where(valid[..., None, None], k, 0.0)        # masked: no kv
+    sN, y = _wkv_chunk(s0.astype(jnp.float32), (r, k, v, logw), cfg, p["u"])
+    y = y.reshape(b, c, d).astype(x.dtype)
+    y = rmsnorm(p["ln_x"], y) * jax.nn.silu(g)
+    return linear_apply(p["wo"], y, pol), (_ragged_prev(prev, x, n_new), sN)
+
+
+def rwkv6_channel_mix_ragged(p, x, prev, n_new, cfg: RWKV6Config,
+                             pol: QuantPolicy):
+    """Ragged chunk channel-mix: the only cross-token state is the
+    token-shift carry, so the math is :func:`rwkv6_channel_mix` verbatim;
+    just the carry advances by each slot's own n_new."""
+    out, _ = rwkv6_channel_mix(p, x, cfg, pol, prev=prev.astype(x.dtype))
+    return out, _ragged_prev(prev, x, n_new)
 
 
 def rwkv6_init_state(batch: int, cfg: RWKV6Config, dtype=jnp.float32):

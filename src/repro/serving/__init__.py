@@ -1,10 +1,14 @@
-"""Continuous-batching serving engine (slotted cache — per-head KV for
-gqa families, compressed latent + rope key for MLA — with in-flight
-batching, chunked prefill, per-request termination).
+"""Continuous-batching serving engine over unified per-slot decode
+state (``repro.models.slot_state.SlotState``): slotted per-head KV (gqa
+families), compressed latent + rope key (MLA), running Mamba2/RWKV6
+recurrences (mamba_hybrid / rwkv — reinitialized on eviction), and
+frozen per-slot cross caches (encdec) — with in-flight batching,
+chunked prefill and per-request termination.
 
     from repro.serving import ContinuousEngine
     eng = ContinuousEngine(lm, merged, n_slots=4, max_len=64)
     rid = eng.submit(prompt_ids, max_new_tokens=16, eos_id=None)
+    rid = eng.submit(tgt_ids, 16, src=frames)   # encdec: pin cross cache
     outputs = eng.run()          # {rid: [tok, ...]}
     eng.stats.tok_per_s, eng.stats.occupancy
 """

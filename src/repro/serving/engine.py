@@ -17,12 +17,17 @@ deciding what each slot consumes:
     (finished slots idle on-device until the burst returns), amortizing
     the per-step dispatch that made the legacy loop slow (PR 1).
 
-For dense-attention families (gqa, and mla_moe's MLA layers — the
-slotted cache holds the compressed latent + rope key and attention runs
-absorbed in the rank space), token streams are identical for any
+Per-slot decode state is the family-agnostic ``SlotState`` pytree
+(``repro.models.slot_state``): slotted KV / compressed-KV for the
+attention families, running Mamba2/RWKV6 recurrences for the recurrent
+families (eviction reinitializes them via ``SlotState.reset``), and a
+frozen per-slot cross cache for encdec (encoded once at admission).
+For deterministic-routing families (gqa, mla_moe's MLA layers,
+mamba_hybrid, rwkv, encdec), token streams are identical for any
 ``prefill_chunk`` / ``decode_burst`` setting and identical to running
 each request alone through the static ``generate_scan`` path
-(tests/test_serving_engine.py, tests/test_serving_mla.py).  For MoE
+(tests/test_serving_engine.py, tests/test_serving_mla.py,
+tests/test_serving_recurrent.py, tests/test_serving_encdec.py).  For MoE
 layers (gqa_moe, and deepseek-v3's routed layers) the engine runs, but
 finite expert capacity makes routing depend on batch composition —
 co-resident slots (and idle rows) compete for capacity, so per-request
@@ -74,12 +79,26 @@ def _burst_steps(lm, params, aux, cache, tok, remaining, eos, *,
     return cache, tok, remaining, emitted
 
 
-# one shared compile cache across engine instances: `lm` is a hashable
-# frozen dataclass, so jit memoizes per (lm, shapes) — building a second
-# engine for the same model does not re-trace
+def _slot_reset(slot_state, cache, mask):
+    # eviction is family-agnostic: SlotState zeroes the evicted slots'
+    # lengths AND their snapshot state (recurrences, cross caches);
+    # length-indexed KV rows stay in place, masked by the zeroed length
+    return slot_state.reset(cache, mask)
+
+
+def _encode_cross(lm, params, src):
+    return lm.encode_cross(params, src)
+
+
+# one shared compile cache across engine instances: `lm` (and its
+# SlotState) is a hashable frozen dataclass, so jit memoizes per
+# (lm, shapes) — building a second engine for the same model does not
+# re-trace
 _JIT_STEP = jax.jit(_ragged_step, static_argnums=0)
 _JIT_BURST = jax.jit(_burst_steps, static_argnums=0,
                      static_argnames=("k_steps",))
+_JIT_RESET = jax.jit(_slot_reset, static_argnums=0)
+_JIT_ENCODE = jax.jit(_encode_cross, static_argnums=0)
 
 
 @dataclasses.dataclass
@@ -110,18 +129,22 @@ class EngineStats:
         return self.tokens_out / max(self.seconds, 1e-9)
 
 
-SLOTTED_FAMILIES = ("gqa", "gqa_moe", "mla_moe")
-
-
 class ContinuousEngine:
-    """Serve an LM with in-flight batching over a slotted cache.
+    """Serve an LM with in-flight batching over unified per-slot state.
 
-    ``n_slots`` concurrent requests share one cache of per-slot capacity
-    ``max_len`` (each request needs prompt + max_new <= max_len).  The
-    slotted-cache families are supported — gqa / gqa_moe (per-head KV)
-    and mla_moe (DeepSeek-style compressed latent ``c`` + rope key
-    ``kr``, attention absorbed into the rank space); recurrent-state
-    families keep the static path.
+    ``n_slots`` concurrent requests share one decode-state pytree of
+    per-slot capacity ``max_len`` (each request needs prompt + max_new
+    <= max_len).  Family support is derived from the model itself
+    (``lm.supports_ragged()`` — the same guard ``LM.step_ragged`` owns,
+    so the engine can never silently desync from the model): gqa /
+    gqa_moe (slotted per-head KV), mla_moe (DeepSeek-style compressed
+    latent ``c`` + rope key ``kr``, attention absorbed into the rank
+    space), mamba_hybrid / rwkv (per-slot running recurrences — eviction
+    reinitializes them via ``SlotState.reset``; the hybrid family's
+    shared-attention blocks ride the slotted-KV chunk path), and encdec
+    (slotted self-KV plus a frozen per-slot cross cache of capacity
+    ``max_src``, encoded once at admission from the request's ``src``
+    frames; a src-less request serves with a zero cross context).
 
     For mla_moe the step-invariant absorbed weights (the dequantized
     effective W_uk/W_uv of every layer's ``kv_up``) are computed ONCE at
@@ -139,17 +162,22 @@ class ContinuousEngine:
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  prefill_chunk: int = 8, decode_burst: int = 8,
-                 cache_dtype=jnp.float32):
-        if lm.cfg.family not in SLOTTED_FAMILIES:
+                 cache_dtype=jnp.float32, max_src: int = 0):
+        if not lm.supports_ragged():
             raise NotImplementedError(
-                f"continuous engine needs a slotted cache; family "
-                f"{lm.cfg.family!r} is not supported (use --engine static)")
+                f"continuous engine: family {lm.cfg.family!r} has no "
+                f"LM.step_ragged support (lm.supports_ragged() is False); "
+                f"use --engine static")
         self.lm, self.params = lm, params
         self.n_slots, self.max_len = n_slots, max_len
         self.prefill_chunk = prefill_chunk
         db = max(1, decode_burst)
         self.decode_burst = 1 << (db.bit_length() - 1)
         self.cache_dtype = cache_dtype
+        self.slot_state = lm.slot_state()
+        # encdec: per-slot frozen cross-cache capacity (encoder frames)
+        self.max_src = (max(1, max_src or int(max_len * lm.cfg.source_frac))
+                        if lm.cfg.family == "encdec" else 0)
         # step-invariant per-layer absorbed weights (None for gqa):
         # dequantized once here, never inside the per-step jitted graph
         self.aux = lm.absorbed_weights(params)
@@ -159,21 +187,37 @@ class ContinuousEngine:
         """Drop all queued/in-flight state (compiled steps are shared
         module-wide and survive)."""
         self.sched = Scheduler(self.n_slots, self.max_len, self.prefill_chunk)
-        self.cache = self.lm.init_cache(self.n_slots, self.max_len,
-                                        dtype=self.cache_dtype)
+        self.cache = self.slot_state.init(
+            self.n_slots, self.max_len, dtype=self.cache_dtype,
+            src_cap=self.max_src or None)
         self.stats = EngineStats()
 
     # ---------------- public API ----------------
 
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None,
-               rid: Optional[int] = None) -> int:
+               rid: Optional[int] = None, src=None) -> int:
         """Queue a request; returns its rid (key into run()'s results).
         Pass ``rid`` to keep a caller-side id (e.g. a trace's pinned
-        rid); omitted rids auto-assign past any pinned ones."""
+        rid); omitted rids auto-assign past any pinned ones.  ``src``
+        (encdec only) carries the request's encoder frames [Ss, d]."""
+        if src is not None:
+            if self.lm.cfg.family != "encdec":
+                raise ValueError(
+                    f"src frames are an encdec request field; family is "
+                    f"{self.lm.cfg.family!r}")
+            src = np.asarray(src, np.float32)
+            if src.ndim != 2 or src.shape[1] != self.lm.cfg.d_model:
+                raise ValueError(
+                    f"src must be [Ss, d_model={self.lm.cfg.d_model}]; "
+                    f"got {src.shape}")
+            if src.shape[0] > self.max_src:
+                raise ValueError(
+                    f"request has {src.shape[0]} encoder frames but the "
+                    f"engine's cross cache holds max_src={self.max_src}")
         req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      rid=-1 if rid is None else rid)
+                      rid=-1 if rid is None else rid, src=src)
         return self.sched.submit(req)
 
     def run(self) -> Dict[int, List[int]]:
@@ -190,14 +234,45 @@ class ContinuousEngine:
     def _iterate(self):
         filled = self.sched.admit()
         if filled:
-            # evict + refill: reset the slots' lengths in one batched
-            # update; stale KV beyond them is masked out by construction
-            self.cache["len"] = self.cache["len"].at[
-                jnp.asarray(filled)].set(0)
+            # evict + refill, family-agnostic: one batched SlotState.reset
+            # zeroes the refilled slots' lengths and snapshot state
+            # (recurrences, cross caches); stale KV rows beyond the zeroed
+            # lengths are masked out by construction
+            mask = np.zeros((self.n_slots,), bool)
+            mask[filled] = True
+            self.cache = _JIT_RESET(self.slot_state, self.cache,
+                                    jnp.asarray(mask))
+            self._pin_cross(filled)
         if self.sched.all_decoding:
             self._run_burst()
         else:
             self._run_ragged()
+
+    def _pin_cross(self, filled):
+        """encdec admission: encode each refilled slot's ``src`` frames
+        once and pin the per-layer cross K/V into the slot's frozen cross
+        cache (one compile per distinct src length — the encoder is
+        bidirectional, so frames cannot be zero-padded without changing
+        valid outputs).  Src-less requests keep the zeroed cross cache
+        (cross len 0: a zero context, like the static token-only path)."""
+        if self.lm.cfg.family != "encdec":
+            return
+        cross = self.cache["layers"]["cross"]
+        for i in filled:
+            src = self.sched.slots[i].req.src
+            if src is None:
+                continue
+            ss = src.shape[0]
+            ks, vs = _JIT_ENCODE(self.lm, self.params,
+                                 jnp.asarray(src)[None])
+            cross = {
+                "k": cross["k"].at[:, i, :ss].set(
+                    ks[:, 0].astype(cross["k"].dtype)),
+                "v": cross["v"].at[:, i, :ss].set(
+                    vs[:, 0].astype(cross["v"].dtype)),
+                "len": cross["len"].at[i].set(ss),
+            }
+        self.cache["layers"]["cross"] = cross
 
     def _run_ragged(self):
         """One mixed prefill/decode ragged step."""

@@ -26,12 +26,18 @@ import numpy as np
 class Request:
     """One generation request.  ``eos_id=None`` disables EOS termination;
     generation always stops after ``max_new_tokens`` tokens.  The emitted
-    sequence includes the EOS token when one is hit."""
+    sequence includes the EOS token when one is hit.
+
+    ``src`` (encdec only) carries the request's encoder frames [Ss, d];
+    at admission the engine encodes them once and pins the resulting
+    cross K/V into the slot's frozen cross cache.  ``None`` serves with
+    an empty (all-masked, zero-context) cross cache."""
 
     prompt: np.ndarray            # [P] int32, P >= 1
     max_new_tokens: int
     eos_id: Optional[int] = None
     rid: int = -1                 # assigned by Scheduler.submit
+    src: Optional[np.ndarray] = None  # [Ss, d] encoder frames (encdec)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,110 @@
+"""Hypothesis property suite for the host-side Scheduler: random traces
+driven through the real plan/commit and burst_state/commit_burst
+interfaces (with a synthetic device) must satisfy the slot-lifecycle
+invariants the engine relies on:
+
+  * no two live requests ever share a slot, and a live request occupies
+    exactly one slot;
+  * every request is admitted exactly once, in FIFO submission order;
+  * every admitted request terminates — at EOS (inclusive) or max-len —
+    with its slot evicted and its output recorded exactly once.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback sweep (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serving import Request, Scheduler
+
+EOS = 7
+
+
+def _run_trace(n_slots, prefill_chunk, n_requests, seed):
+    rng = np.random.default_rng(seed)
+    max_len = 64
+    sched = Scheduler(n_slots=n_slots, max_len=max_len,
+                      prefill_chunk=prefill_chunk)
+    reqs = []
+    for _ in range(n_requests):
+        p = int(rng.integers(1, 9))
+        g = int(rng.integers(1, 7))
+        eos = EOS if rng.random() < 0.5 else None
+        r = Request(prompt=rng.integers(10, 50, size=(p,)).astype(np.int32),
+                    max_new_tokens=g, eos_id=eos)
+        sched.submit(r)
+        reqs.append(r)
+
+    admitted_order = []
+    live_history = []
+    steps = 0
+    while sched.has_work:
+        steps += 1
+        assert steps < 10_000, "scheduler failed to terminate"
+        for i in sched.admit():
+            admitted_order.append(sched.slots[i].req.rid)
+
+        # invariant: live rids are unique and each in exactly one slot
+        live = [s.req.rid for s in sched.slots if s is not None]
+        assert len(live) == len(set(live))
+        live_history.append(set(live))
+
+        use_burst = sched.all_decoding and rng.random() < 0.5
+        if use_burst:
+            tok, remaining, eos_v = sched.burst_state()
+            k = int(rng.integers(1, 5))
+            emitted = np.full((k, n_slots), -1, np.int32)
+            for step in range(k):
+                for i in range(n_slots):
+                    if remaining[i] <= 0:
+                        continue
+                    nxt = int(rng.integers(10, 50))
+                    if rng.random() < 0.25:
+                        nxt = EOS
+                    emitted[step, i] = nxt
+                    tok[i] = nxt
+                    stop = remaining[i] <= 1 or nxt == eos_v[i]
+                    remaining[i] = 0 if stop else remaining[i] - 1
+            sched.commit_burst(emitted, tok, remaining)
+        else:
+            _, n_new = sched.plan()
+            nxt = rng.integers(10, 50, size=(n_slots,)).astype(np.int32)
+            nxt[rng.random(n_slots) < 0.25] = EOS
+            sched.commit(nxt)
+
+    return reqs, sched, admitted_order
+
+
+@settings(deadline=None, max_examples=40)
+@given(n_slots=st.integers(1, 4), prefill_chunk=st.integers(1, 6),
+       n_requests=st.integers(0, 12), seed=st.integers(0, 10_000))
+def test_scheduler_trace_invariants(n_slots, prefill_chunk, n_requests,
+                                    seed):
+    reqs, sched, admitted_order = _run_trace(n_slots, prefill_chunk,
+                                             n_requests, seed)
+
+    # admitted exactly once, in FIFO submission order
+    assert admitted_order == [r.rid for r in reqs]
+
+    # every request terminated: output recorded once, slot evicted
+    assert sorted(sched.outputs) == sorted(r.rid for r in reqs)
+    assert all(s is None for s in sched.slots)
+    assert not sched.queue
+
+    for r in reqs:
+        out = sched.outputs[r.rid]
+        assert 1 <= len(out) <= r.max_new_tokens
+        if len(out) < r.max_new_tokens:
+            # early termination is only ever EOS (inclusive, exactly once)
+            assert r.eos_id is not None and out[-1] == r.eos_id
+            assert r.eos_id not in out[:-1]
+        elif r.eos_id is not None and r.eos_id in out:
+            # full-budget stream may END on EOS but never continue past it
+            assert out.index(r.eos_id) == len(out) - 1

@@ -101,3 +101,18 @@ def test_serve_main_prompt_len_zero():
     from repro.launch.serve import main
     main(["--arch", "gemma3-1b", "--reduced", "--requests", "1",
           "--prompt-len", "0", "--gen-len", "2"])
+
+
+def test_serve_main_unsupported_family_names_family_and_docs(monkeypatch,
+                                                             capsys):
+    """A family without ragged support must fail as a clear CLI error
+    naming the family and pointing at the README family-support matrix —
+    not as the bare engine-constructor traceback."""
+    from repro.launch.serve import main
+    monkeypatch.setattr(LM, "supports_ragged", lambda self: False)
+    with pytest.raises(SystemExit):
+        main(["--arch", "gemma3-1b", "--reduced", "--engine", "continuous",
+              "--requests", "1", "--gen-len", "2"])
+    err = capsys.readouterr().err
+    assert "'gqa'" in err and "family-support" in err
+    assert "--engine static" in err
