@@ -13,6 +13,10 @@
   engine  serving-engine bench: continuous batching (slot eviction +
           refill) vs static batching on a mixed-length request trace
           (useful tok/s, slot occupancy)
+  slo     latency-SLO harness: live Poisson/bursty arrivals replayed
+          against the async ServingFrontend (threaded intake, bounded
+          queue, deadlines), clean AND fault-injected — TTFT/TPOT
+          p50/p95/p99, timeout/reject rates, goodput, recoveries
   roofline summary of experiments/roofline.json (run dryrun first)
 
 Each prints CSV ``name,us_per_call,derived`` style rows and everything is
@@ -504,6 +508,108 @@ def engine_bench():
         note="; zamba2 reduced, hybrid mamba + shared-attn slot state")
 
 
+def _slo_run(lm, merged, trace, arrivals, *, slots, max_len, queue_cap,
+             deadline_s, injector=None):
+    """One live frontend run: replay ``trace`` at ``arrivals`` against a
+    threaded ServingFrontend, drain, return its slo_summary dict."""
+    from repro.serving import ServingFrontend, replay, slo_summary
+
+    fe = ServingFrontend(lm, merged, n_slots=slots, max_len=max_len,
+                         prefill_chunk=4, decode_burst=4,
+                         queue_cap=queue_cap, default_deadline_s=deadline_s,
+                         injector=injector)
+    fe.start()
+    replay(lambda r: fe.submit(r.prompt, r.max_new_tokens, eos_id=r.eos_id),
+           trace, arrivals)
+    fe.stop()
+    return slo_summary(fe)
+
+
+def slo_bench():
+    """Latency-SLO harness: Poisson vs bursty open-loop arrivals (same
+    mean rate) replayed live against the async ServingFrontend — bounded
+    intake queue, per-request deadlines — both clean and fault-injected
+    (a deterministic mid-run crash + random stragglers).  Rows are TTFT
+    and TPOT p50/p95/p99, timeout/reject rates, goodput and recovery
+    count per (arrival, mode) combination.  The offered rate is set to
+    ~70% of capacity measured on this machine, so the clean Poisson rows
+    are the healthy baseline and the bursty/faulty rows show the tails."""
+    import math
+
+    import repro.configs as C
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.serve import merge_model
+    from repro.models.lm import LM
+    from repro.runtime import FaultInjector
+    from repro.serving import (ServingFrontend, bursty_arrivals, make_trace,
+                               poisson_arrivals, slo_summary)
+
+    cfg = C.reduced("gemma3-1b")
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+    slots, max_len, n_req = 4, 24, 32
+    lens = dict(prompt_lens=(3, 5, 8), gen_lens=(4, 8, 12))
+    trace = make_trace(n_req, cfg.vocab, seed=0, **lens)
+
+    mesh = make_cpu_mesh()
+    with mesh:
+        # two warm runs through the REAL threaded serve loop: the first
+        # pays compilation (compiled jits are cached module-level, so
+        # fresh frontends reuse them); the second measures request
+        # capacity and end-to-end latency under full saturation — all
+        # requests submitted at once — so rate and deadline are
+        # calibrated to this machine instead of being magic constants
+        for phase in range(2):
+            warm = ServingFrontend(lm, merged, n_slots=slots,
+                                   max_len=max_len, prefill_chunk=4,
+                                   decode_burst=4, queue_cap=n_req)
+            warm.start()
+            for r in make_trace(2 * slots, cfg.vocab, seed=7, **lens):
+                warm.submit(r.prompt, r.max_new_tokens, eos_id=r.eos_id)
+            warm.stop()
+        cap = slo_summary(warm)
+        lat = [t.t_done - t.t_submit for t in warm.tickets.values()
+               if t.t_done is not None]
+        rate = 0.7 * cap["finished"] / max(warm.wall_s, 1e-9)
+        # total deadline 3x the saturated end-to-end latency: clean
+        # Poisson traffic at 70% load should make it; bursty tails and
+        # crash recovery may not (that is the point)
+        deadline = max(3.0 * max(lat), 0.1)
+
+        for arr_name, arrivals in (
+                ("poisson", poisson_arrivals(n_req, rate, seed=1)),
+                ("bursty", bursty_arrivals(n_req, rate, burst=6, seed=1))):
+            for mode in ("clean", "faulty"):
+                inj = (FaultInjector(seed=2, crash_steps=(8,),
+                                     p_straggle=0.05, straggle_s=0.01)
+                       if mode == "faulty" else None)
+                s = _slo_run(lm, merged, trace, arrivals, slots=slots,
+                             max_len=max_len, queue_cap=2 * slots,
+                             deadline_s=deadline, injector=inj)
+                note = (f"{arr_name} arrivals @ {rate:.1f} req/s, {mode}; "
+                        f"{s['finished']}/{s['n_requests']} finished, "
+                        f"{s['recoveries']} recoveries, deadline "
+                        f"{deadline * 1e3:.0f}ms, queue cap {2 * slots}")
+                pre = f"{arr_name}-{mode}-"
+                for key, label in (("ttft_p50_s", "ttft-p50-ms"),
+                                   ("ttft_p95_s", "ttft-p95-ms"),
+                                   ("ttft_p99_s", "ttft-p99-ms"),
+                                   ("tpot_p50_s", "tpot-p50-ms"),
+                                   ("tpot_p95_s", "tpot-p95-ms"),
+                                   ("tpot_p99_s", "tpot-p99-ms")):
+                    v = s[key]
+                    # nan percentile = no finished requests in this combo
+                    emit("slo", pre + label,
+                         -1.0 if math.isnan(v) else round(v * 1e3, 2), note)
+                emit("slo", pre + "timeout-rate", round(s["timeout_rate"], 3),
+                     note)
+                emit("slo", pre + "reject-rate", round(s["reject_rate"], 3),
+                     note)
+                emit("slo", pre + "goodput-tok_s",
+                     round(s["goodput_tok_s"], 1), note)
+                emit("slo", pre + "recoveries", int(s["recoveries"]), note)
+
+
 def roofline_summary():
     path = "experiments/roofline.json"
     if not os.path.exists(path):
@@ -529,6 +635,7 @@ TABLES = {
     "kernels": kernels_bench,
     "decode": decode_bench,
     "engine": engine_bench,
+    "slo": slo_bench,
     "roofline": roofline_summary,
 }
 

@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, save_pytree, load_pytree  # noqa: F401
+from .manager import (CheckpointManager, save_pytree, load_pytree,  # noqa: F401
+                      is_complete)

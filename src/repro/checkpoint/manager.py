@@ -35,8 +35,21 @@ def _flatten(tree):
     return leaves, treedef
 
 
+MANIFEST = "manifest.json"
+
+
+def is_complete(path: str) -> bool:
+    """A checkpoint dir is valid iff its manifest exists — the manifest is
+    written LAST, so a torn dir (crash mid-write, non-atomic rename on a
+    network filesystem) can never be mistaken for a valid checkpoint."""
+    return os.path.exists(os.path.join(path, MANIFEST))
+
+
 def save_pytree(tree, path: str):
-    """Synchronous atomic write of one pytree to `path/` (npz + structure)."""
+    """Synchronous atomic write of one pytree to `path/` (npz + structure).
+
+    The manifest is written last inside the staging dir: readers treat a
+    dir without it as torn and skip it (see :func:`is_complete`)."""
     tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -53,6 +66,8 @@ def save_pytree(tree, path: str):
     with open(os.path.join(tmp, "treedef.json"), "w") as f:
         json.dump({"treedef": str(treedef), "n": len(leaves),
                    "dtypes": dtypes}, f)
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump({"complete": True, "n": len(leaves)}, f)
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
@@ -62,6 +77,11 @@ def load_pytree(path: str, like) -> Any:
     """Restore into the structure of `like` (arrays placed per its shardings
     if `like` leaves carry shardings, else host numpy)."""
     import ml_dtypes  # jax dependency, always present
+    if not is_complete(path):
+        raise ValueError(
+            f"torn/incomplete checkpoint at {path!r}: no {MANIFEST} "
+            f"(the manifest is written last — a dir without one is a "
+            f"partial write and must not be restored)")
     with open(os.path.join(path, "treedef.json")) as f:
         meta = json.load(f)
     with np.load(os.path.join(path, "leaves.npz")) as z:
@@ -119,6 +139,13 @@ class CheckpointManager:
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # torn dirs (no manifest: crashed writer) are dead weight —
+        # all_steps() never returns them, so reap them here
+        for d in os.listdir(self.dir):
+            p = os.path.join(self.dir, d)
+            if (d.startswith("step_") and not d.endswith(".tmp")
+                    and os.path.isdir(p) and not is_complete(p)):
+                shutil.rmtree(p, ignore_errors=True)
 
     # ------------------------------------------------------------------
 
@@ -149,7 +176,8 @@ class CheckpointManager:
     def all_steps(self):
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
+            if (d.startswith("step_") and not d.endswith(".tmp")
+                    and is_complete(os.path.join(self.dir, d))):
                 out.append(int(d.split("_")[1]))
         return sorted(out)
 

@@ -14,6 +14,17 @@ Engines (`--engine`):
               slot until the longest request completes.  Kept as the
               reference path.  `--loop` falls back further, to the legacy
               per-token loop (the timing/equivalence reference).
+  frontend    the continuous engine behind the fault-tolerant async
+              frontend (`repro.serving.ServingFrontend`): bounded
+              admission queue (--queue-cap; overload rejects with the
+              queue depth in the error), per-request TTFT/total
+              deadlines (--ttft-deadline-ms/--deadline-ms; expired
+              slots are evicted like EOS), typed terminal statuses
+              (FINISHED/REJECTED/TIMED_OUT/CANCELLED/FAILED), and
+              deterministic crash recovery — --inject-faults schedules
+              a seeded mid-trace engine crash plus straggler latency
+              (repro.runtime.fault.FaultInjector) and the frontend
+              replays in-flight requests token-identically.
   continuous  in-flight batching (`repro.serving.ContinuousEngine`):
               queued requests are admitted into free cache slots
               mid-flight, prompts prefill in chunks alongside decoding
@@ -41,6 +52,9 @@ CPU demo:
       --reduced --engine continuous --requests 6 --slots 2 --gen-len 6
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
       --engine continuous --requests 8 --slots 3 --gen-len 8
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+      --engine frontend --requests 8 --slots 2 --gen-len 8 \
+      --queue-cap 4 --deadline-ms 30000 --inject-faults
 """
 
 from __future__ import annotations
@@ -154,10 +168,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--verify", action="store_true")
-    ap.add_argument("--engine", choices=("static", "continuous"),
+    ap.add_argument("--engine", choices=("static", "continuous", "frontend"),
                     default="static",
                     help="static: one fixed-shape batch (reference); "
-                         "continuous: in-flight batching with slot refill")
+                         "continuous: in-flight batching with slot refill; "
+                         "frontend: continuous engine behind the "
+                         "fault-tolerant async frontend (deadlines, "
+                         "backpressure, crash recovery)")
     ap.add_argument("--slots", type=int, default=0,
                     help="continuous engine KV slots (default "
                          "min(4, requests))")
@@ -166,6 +183,21 @@ def main(argv=None):
     ap.add_argument("--decode-burst", type=int, default=8,
                     help="continuous engine fused decode steps per dispatch "
                          "(clamped down to a power of two)")
+    ap.add_argument("--queue-cap", type=int, default=64,
+                    help="frontend admission bound: submits past this "
+                         "many waiting requests are REJECTED with the "
+                         "queue depth in the error")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="frontend per-request total deadline (0 = none); "
+                         "an expired slot is evicted like EOS")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0,
+                    help="frontend per-request time-to-first-token "
+                         "deadline (0 = none)")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="frontend only: seeded FaultInjector (one "
+                         "mid-trace engine crash + straggler latency); "
+                         "recovery replays in-flight requests "
+                         "token-identically")
     ap.add_argument("--loop", action="store_true",
                     help="use the legacy per-token loop instead of scan")
     ap.add_argument("--policy", default="",
@@ -210,6 +242,65 @@ def main(argv=None):
     use_loop = args.loop or cfg.family == "encdec"
     mesh = make_cpu_mesh()
     with mesh:
+        if args.engine == "frontend":
+            from repro.runtime.fault import FaultInjector, PreemptionGuard
+            from repro.serving import ServingFrontend, slo_summary
+            if args.loop:
+                ap.error("--loop is the static reference path; "
+                         "drop it or use --engine static")
+            if args.gen_len < 1:
+                ap.error("--engine frontend needs --gen-len >= 1")
+            slots = args.slots or min(4, b)
+            injector = None
+            if args.inject_faults:
+                # one crash once decode is underway + a sprinkle of
+                # injected straggler latency; the frontend replays
+                # in-flight requests token-identically after the rebuild
+                injector = FaultInjector(seed=0, crash_steps=(5,),
+                                         p_straggle=0.1, straggle_s=0.01)
+            ms = lambda v: (v / 1e3) if v and v > 0 else None
+            with PreemptionGuard() as guard:
+                try:
+                    fe = ServingFrontend(
+                        lm, merged, n_slots=slots, max_len=max_len,
+                        prefill_chunk=args.prefill_chunk,
+                        decode_burst=args.decode_burst,
+                        queue_cap=args.queue_cap,
+                        default_deadline_s=ms(args.deadline_ms),
+                        default_ttft_deadline_s=ms(args.ttft_deadline_ms),
+                        injector=injector, guard=guard)
+                except NotImplementedError:
+                    ap.error(
+                        f"--engine frontend does not support the "
+                        f"{cfg.family!r} family (arch {cfg.name}); fall "
+                        f"back to --engine static, and see the "
+                        f"family-support matrix in README.md 'Serving "
+                        f"engine' for what each engine covers")
+                tickets = [fe.submit(prompts[i], args.gen_len)
+                           for i in range(b)]
+                counts = fe.run_until_drained()
+            s = slo_summary(fe)
+            est = fe.engine_stats
+            print(f"[serve] frontend: {counts} "
+                  f"({fe.n_recoveries} recoveries, occupancy "
+                  f"{est.occupancy:.0%}, {est.dispatches} dispatches)")
+            print(f"[serve] SLO: ttft p50/p95 "
+                  f"{s['ttft_p50_s'] * 1e3:.0f}/{s['ttft_p95_s'] * 1e3:.0f}ms"
+                  f", tpot p50 {s['tpot_p50_s'] * 1e3:.1f}ms, goodput "
+                  f"{s['goodput_tok_s']:.1f} tok/s, timeout rate "
+                  f"{s['timeout_rate']:.0%}, reject rate "
+                  f"{s['reject_rate']:.0%}")
+            for t in tickets:
+                if t.error:
+                    print(f"[serve]   rid {t.rid}: {t.status.name} — "
+                          f"{t.error}")
+            done = [t for t in tickets
+                    if t.status.name == "FINISHED"]
+            if done:
+                print(f"[serve] sample generation: "
+                      f"{np.asarray(done[0].tokens[:8], np.int32)}")
+            print("[serve] done")
+            return
         if args.engine == "continuous":
             from repro.serving import ContinuousEngine
             if args.loop:

@@ -1,2 +1,2 @@
 from .fault import (Heartbeat, StragglerDetector, PreemptionGuard,  # noqa: F401
-                    RestartableLoop)
+                    RestartableLoop, FaultInjector, InjectedFault)

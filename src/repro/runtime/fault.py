@@ -17,6 +17,10 @@ checkpoint with a possibly different topology.  Pieces:
 * ``RestartableLoop`` — drives (data cursor, step counter, checkpoint
   cadence) so a crash at any point resumes bit-identically (the data
   pipeline is O(1)-seekable).
+* ``FaultInjector`` — seeded, deterministic fault schedule for the
+  serving engine's step hook (crashes, injected straggler latency,
+  NaN state corruption); the test/bench harness that lets
+  ``repro.serving.frontend.ServingFrontend`` pin its recovery path.
 """
 
 from __future__ import annotations
@@ -26,7 +30,9 @@ import os
 import signal
 import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
+
+import numpy as np
 
 
 class Heartbeat:
@@ -133,6 +139,7 @@ class RestartableLoop:
 
     def run(self, body: Callable[[int], dict]):
         last = self.start_step
+        saved = None
         for step in range(self.start_step, self.total_steps):
             t0 = time.time()
             metrics = body(step)
@@ -142,7 +149,87 @@ class RestartableLoop:
             last = step + 1
             if last % self.ckpt_every == 0:
                 self.save_cb(last)
+                saved = last
             if self.guard is not None and self.guard.requested:
                 break
-        self.save_cb(last)
+        # final save only when the cadence didn't already cover `last` —
+        # a loop that exits (normally or preempted) right on a ckpt_every
+        # boundary must not write the same step twice
+        if saved != last:
+            self.save_cb(last)
         return last
+
+
+class InjectedFault(RuntimeError):
+    """Raised by :class:`FaultInjector` to simulate an engine-step crash
+    (the serving analogue of a host vanishing mid-train-step)."""
+
+
+class FaultInjector:
+    """Seeded, deterministic fault schedule over engine dispatches.
+
+    Usable as a :class:`repro.serving.ContinuousEngine` ``step_hook``
+    (called once per dispatch with the engine).  Three fault kinds:
+
+    * ``"crash"``     — raise :class:`InjectedFault` before the dispatch
+                        (the engine loses every in-flight request unless
+                        a frontend recovers it);
+    * ``"straggle"``  — sleep ``straggle_s`` before the dispatch
+                        (injected tail latency, visible in SLO p99s);
+    * ``"nan"``       — poison the engine's decode-state pytree with NaN
+                        (``engine.poison_cache()``): the next step's
+                        logits go non-finite and the engine's in-graph
+                        health bit trips *before* any token commits.
+
+    Faults fire either at explicit dispatch indices (``crash_steps`` et
+    al. — the deterministic schedule recovery-equivalence tests pin) or
+    probabilistically from a seeded generator.  The probabilistic draws
+    consume a FIXED number of variates per dispatch, so the schedule is
+    a pure function of (seed, dispatch index) regardless of which faults
+    fire.  Explicit step indices fire at most once (the dispatch counter
+    passes them), so a recovered engine does not re-crash on the same
+    schedule entry.
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 crash_steps: Sequence[int] = (),
+                 nan_steps: Sequence[int] = (),
+                 straggle_steps: Sequence[int] = (),
+                 p_crash: float = 0.0, p_nan: float = 0.0,
+                 p_straggle: float = 0.0, straggle_s: float = 0.02,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.crash_steps = frozenset(crash_steps)
+        self.nan_steps = frozenset(nan_steps)
+        self.straggle_steps = frozenset(straggle_steps)
+        self.p_crash, self.p_nan, self.p_straggle = p_crash, p_nan, p_straggle
+        self.straggle_s = straggle_s
+        self._sleep = sleep
+        self._rng = np.random.default_rng(seed)
+        self.step = -1            # dispatch counter (first dispatch is 0)
+        self.log: list = []       # [(dispatch, kind), ...] of fired faults
+
+    def next_fault(self) -> Optional[str]:
+        """Advance the dispatch counter and return the fault kind for
+        this dispatch (None for a clean one)."""
+        self.step += 1
+        u = self._rng.random(3)   # always 3 draws: schedule is step-pure
+        if self.step in self.crash_steps or u[0] < self.p_crash:
+            return "crash"
+        if self.step in self.nan_steps or u[1] < self.p_nan:
+            return "nan"
+        if self.step in self.straggle_steps or u[2] < self.p_straggle:
+            return "straggle"
+        return None
+
+    def __call__(self, engine) -> None:
+        kind = self.next_fault()
+        if kind is None:
+            return
+        self.log.append((self.step, kind))
+        if kind == "straggle":
+            self._sleep(self.straggle_s)
+        elif kind == "nan":
+            engine.poison_cache()
+        else:
+            raise InjectedFault(f"injected engine crash at dispatch "
+                                f"{self.step}")

@@ -11,11 +11,27 @@ chunked prefill and per-request termination.
     rid = eng.submit(tgt_ids, 16, src=frames)   # encdec: pin cross cache
     outputs = eng.run()          # {rid: [tok, ...]}
     eng.stats.tok_per_s, eng.stats.occupancy
+
+For live traffic, wrap the engine in the fault-tolerant async frontend
+(bounded intake, deadlines, typed terminal statuses, deterministic
+crash recovery, graceful drain):
+
+    from repro.serving import ServingFrontend
+    fe = ServingFrontend(lm, merged, n_slots=4, max_len=64,
+                         queue_cap=32).start()
+    t = fe.submit(prompt_ids, 16, deadline_s=2.0)   # any thread
+    fe.stop()                    # drain; t.status / t.tokens / t.ttft
 """
 
-from .engine import ContinuousEngine, EngineStats
+from .engine import ContinuousEngine, EngineCorrupted, EngineStats
+from .frontend import (RequestStatus, ServingFrontend, Ticket,
+                       TERMINAL_STATUSES, slo_summary)
 from .scheduler import Request, Scheduler, Slot
-from .trace import make_trace, static_schedule
+from .trace import (bursty_arrivals, make_trace, poisson_arrivals, replay,
+                    static_schedule)
 
-__all__ = ["ContinuousEngine", "EngineStats", "Request", "Scheduler",
-           "Slot", "make_trace", "static_schedule"]
+__all__ = ["ContinuousEngine", "EngineCorrupted", "EngineStats",
+           "Request", "RequestStatus", "Scheduler", "ServingFrontend",
+           "Slot", "Ticket", "TERMINAL_STATUSES", "bursty_arrivals",
+           "make_trace", "poisson_arrivals", "replay", "slo_summary",
+           "static_schedule"]

@@ -51,9 +51,16 @@ from .scheduler import Request, Scheduler
 
 def _ragged_step(lm, params, aux, cache, tokens, n_new):
     # argmax in-graph: the host only needs next tokens, not [B, vocab]
-    # logits (at real vocab sizes that transfer dominates the step)
+    # logits (at real vocab sizes that transfer dominates the step).
+    # `ok` is the in-graph health bit: non-finite logits (NaN/inf from
+    # corrupted state) trip it BEFORE any token is committed host-side —
+    # the fault-detection contract ServingFrontend recovery relies on.
+    # Idle/fully-masked slots produce garbage-but-FINITE logits (pinned
+    # by the masked-row finiteness tests), so the all-reduce over the
+    # whole batch does not false-positive on idle rows.
     logits, cache = lm.step_ragged(params, cache, tokens, n_new, aux=aux)
-    return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    ok = jnp.isfinite(logits).all()
+    return jnp.argmax(logits, -1).astype(jnp.int32), ok, cache
 
 
 def _burst_steps(lm, params, aux, cache, tok, remaining, eos, *,
@@ -72,11 +79,11 @@ def _burst_steps(lm, params, aux, cache, tok, remaining, eos, *,
         emit = jnp.where(active, nxt, -1)
         stop = active & ((remaining <= 1) | (nxt == eos))
         remaining = jnp.where(stop, 0, jnp.where(active, remaining - 1, 0))
-        return (cache, nxt, remaining), emit
+        return (cache, nxt, remaining), (emit, jnp.isfinite(logits).all())
 
-    (cache, tok, remaining), emitted = jax.lax.scan(
+    (cache, tok, remaining), (emitted, oks) = jax.lax.scan(
         body, (cache, tok, remaining), None, length=k_steps)
-    return cache, tok, remaining, emitted
+    return cache, tok, remaining, emitted, oks.all()
 
 
 def _slot_reset(slot_state, cache, mask):
@@ -99,6 +106,15 @@ _JIT_BURST = jax.jit(_burst_steps, static_argnums=0,
                      static_argnames=("k_steps",))
 _JIT_RESET = jax.jit(_slot_reset, static_argnums=0)
 _JIT_ENCODE = jax.jit(_encode_cross, static_argnums=0)
+
+
+class EngineCorrupted(RuntimeError):
+    """The in-graph health bit tripped: a step produced non-finite logits
+    (corrupted decode state — e.g. an injected NaN fault, or a real
+    numerical blow-up).  Raised BEFORE the step's tokens commit, so the
+    scheduler's emitted streams stay trustworthy; the engine's device
+    state must be considered poisoned (reset / rebuild to continue —
+    ``ServingFrontend`` does this and replays in-flight requests)."""
 
 
 @dataclasses.dataclass
@@ -162,7 +178,8 @@ class ContinuousEngine:
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  prefill_chunk: int = 8, decode_burst: int = 8,
-                 cache_dtype=jnp.float32, max_src: int = 0):
+                 cache_dtype=jnp.float32, max_src: int = 0,
+                 step_hook=None):
         if not lm.supports_ragged():
             raise NotImplementedError(
                 f"continuous engine: family {lm.cfg.family!r} has no "
@@ -181,6 +198,11 @@ class ContinuousEngine:
         # step-invariant per-layer absorbed weights (None for gqa):
         # dequantized once here, never inside the per-step jitted graph
         self.aux = lm.absorbed_weights(params)
+        # called once per engine iteration, before admission/dispatch:
+        # hook(engine).  May sleep (straggler injection), poison the
+        # decode state (poison_cache) or raise (crash injection) — see
+        # repro.runtime.fault.FaultInjector.  Survives reset().
+        self.step_hook = step_hook
         self.reset()
 
     def reset(self):
@@ -225,13 +247,34 @@ class ContinuousEngine:
         (stats in :attr:`stats`)."""
         t0 = time.time()
         while self.sched.has_work:
-            self._iterate()
+            self.step_once()
         self.stats.seconds += time.time() - t0
         return self.sched.outputs
 
+    def poison_cache(self):
+        """Overwrite every floating-point leaf of the decode state with
+        NaN (fault injection: simulates silent device-state corruption).
+        Any slot whose LIVE state is subsequently read produces NaN
+        logits and trips the in-graph health bit (:class:`EngineCorrupted`
+        before commit); corrupted rows that are masked out or fully
+        overwritten by fresh prefill are — by the engine's own masking
+        contract — never read, so poisoning an all-fresh batch is
+        vacuous."""
+        self.cache = jax.tree.map(
+            lambda x: (jnp.full_like(x, jnp.nan)
+                       if jnp.issubdtype(x.dtype, jnp.floating) else x),
+            self.cache)
+
     # ---------------- one engine iteration ----------------
 
-    def _iterate(self):
+    def step_once(self):
+        """One engine iteration: (step hook ->) admit + reset refilled
+        slots -> one ragged/burst dispatch -> commit.  Raises
+        :class:`EngineCorrupted` (before commit) if the dispatch produced
+        non-finite logits, and propagates whatever the step hook raises
+        (e.g. :class:`repro.runtime.fault.InjectedFault`)."""
+        if self.step_hook is not None:
+            self.step_hook(self)
         filled = self.sched.admit()
         if filled:
             # evict + refill, family-agnostic: one batched SlotState.reset
@@ -277,9 +320,13 @@ class ContinuousEngine:
     def _run_ragged(self):
         """One mixed prefill/decode ragged step."""
         tokens, n_new = self.sched.plan()
-        nxt, self.cache = _JIT_STEP(self.lm, self.params, self.aux,
-                                    self.cache, jnp.asarray(tokens),
-                                    jnp.asarray(n_new))
+        nxt, ok, self.cache = _JIT_STEP(self.lm, self.params, self.aux,
+                                        self.cache, jnp.asarray(tokens),
+                                        jnp.asarray(n_new))
+        if not bool(ok):
+            raise EngineCorrupted(
+                "non-finite logits in ragged step (decode state is "
+                "poisoned); tokens NOT committed")
         nxt = np.asarray(nxt)
         # slots past their prompt after this plan emit one token each;
         # mid-prompt slots consume rows but emit nothing yet
@@ -306,9 +353,13 @@ class ContinuousEngine:
         # slot still idles on-device until the burst returns.
         k_min = int(remaining[remaining > 0].min())
         k = int(min(self.decode_burst, 1 << (k_min.bit_length() - 1)))
-        self.cache, tok_d, rem_d, emitted = _JIT_BURST(
+        self.cache, tok_d, rem_d, emitted, ok = _JIT_BURST(
             self.lm, self.params, self.aux, self.cache, jnp.asarray(tok),
             jnp.asarray(remaining), jnp.asarray(eos), k_steps=k)
+        if not bool(ok):
+            raise EngineCorrupted(
+                "non-finite logits in decode burst (decode state is "
+                "poisoned); tokens NOT committed")
         emitted = np.asarray(emitted)
         self.sched.commit_burst(emitted, np.asarray(tok_d), np.asarray(rem_d))
         st = self.stats

@@ -116,6 +116,31 @@ class Scheduler:
                 filled.append(i)
         return filled
 
+    def evict_slot(self, i: int) -> Optional[Slot]:
+        """Free slot ``i`` WITHOUT recording an output (deadline expiry /
+        cancellation: the request is dropped exactly like an EOS eviction
+        frees the slot, but nothing enters :attr:`outputs`).  Returns the
+        evicted slot (partial ``emitted`` intact) or None if it was free.
+        The engine resets the slot's cache row when it is refilled, so no
+        device work is needed here."""
+        s = self.slots[i]
+        self.slots[i] = None
+        return s
+
+    def remove_queued(self, rid: int) -> bool:
+        """Drop a not-yet-admitted request from the queue (cancellation /
+        queued-deadline expiry).  True iff it was found."""
+        for idx, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[idx]
+                return True
+        return False
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted by submit() but not yet in a slot."""
+        return len(self.queue)
+
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)

@@ -1,14 +1,22 @@
-"""Mixed-length request traces for engine tests / benchmarks.
+"""Mixed-length request traces + arrival processes for engine tests /
+benchmarks.
 
 A trace is a list of :class:`~repro.serving.scheduler.Request`s with
 heterogeneous prompt and generation lengths — the workload where static
 batching wastes slots (every request in a batch waits for the longest)
 and continuous batching refills them.
+
+For the latency-SLO harness a trace additionally carries ARRIVAL TIMES:
+:func:`poisson_arrivals` (open-loop memoryless traffic) and
+:func:`bursty_arrivals` (synchronized bursts at the same mean rate — the
+worst case for backpressure and TTFT tails), replayed against a live
+:class:`~repro.serving.frontend.ServingFrontend` by :func:`replay`.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,6 +47,57 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
         reqs.append(Request(prompt=prompt, max_new_tokens=g, eos_id=eos_id,
                             rid=i))
     return reqs
+
+
+def poisson_arrivals(n: int, rate: float, *, seed: int = 0) -> np.ndarray:
+    """Arrival offsets (seconds from t=0) of an open-loop Poisson process
+    at ``rate`` requests/second: i.i.d. exponential gaps, cumsum'd.
+    Deterministic in ``seed``."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0 req/s; got {rate}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def bursty_arrivals(n: int, rate: float, *, burst: int = 4,
+                    seed: int = 0) -> np.ndarray:
+    """Arrival offsets of a bursty process with the SAME mean rate as
+    :func:`poisson_arrivals`: requests land in synchronized groups of
+    ``burst`` (all at the group's instant), with exponential gaps of mean
+    ``burst / rate`` between groups.  Stresses admission control — a
+    bounded queue sees depth spikes of ``burst`` at once — and TTFT
+    tails, where Poisson traffic at the same rate barely queues."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0 req/s; got {rate}")
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1; got {burst}")
+    rng = np.random.default_rng(seed)
+    n_groups = -(-n // burst)
+    gaps = rng.exponential(burst / rate, size=n_groups)
+    group_t = np.cumsum(gaps)
+    return np.repeat(group_t, burst)[:n]
+
+
+def replay(submit: Callable[[Request], object], reqs: List[Request],
+           arrivals: Sequence[float], *, speed: float = 1.0,
+           clock: Callable[[], float] = time.monotonic,
+           sleep: Callable[[float], None] = time.sleep) -> List[object]:
+    """Open-loop replay: call ``submit(req)`` at each arrival offset
+    (scaled by ``1/speed``), regardless of how the server is keeping up —
+    the load generator never waits for responses, so backpressure and
+    deadline behavior are actually exercised.  Returns submit's results
+    (e.g. frontend tickets) in arrival order.  ``clock``/``sleep`` are
+    injectable so tests can replay virtually."""
+    if len(reqs) != len(arrivals):
+        raise ValueError(f"{len(reqs)} requests vs {len(arrivals)} arrivals")
+    t0 = clock()
+    out = []
+    for req, at in zip(reqs, arrivals):
+        delay = at / speed - (clock() - t0)
+        if delay > 0:
+            sleep(delay)
+        out.append(submit(req))
+    return out
 
 
 def static_schedule(reqs: List[Request],

@@ -1,0 +1,284 @@
+"""Fault-tolerance unit contracts: Heartbeat liveness edge cases,
+StragglerDetector warmup/EWMA hygiene, PreemptionGuard handler
+restoration, RestartableLoop resume-offset + the double-save regression,
+FaultInjector schedule determinism, and the manifest-last torn-checkpoint
+protocol in repro.checkpoint.
+
+These are pure host-side units (no model, no mesh) — all fast lane.
+"""
+
+import json
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, is_complete, load_pytree,
+                              save_pytree)
+from repro.checkpoint.manager import MANIFEST
+from repro.runtime import (FaultInjector, Heartbeat, InjectedFault,
+                           PreemptionGuard, RestartableLoop,
+                           StragglerDetector)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat.is_alive
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_is_alive_fresh(tmp_path):
+    p = str(tmp_path / "hb.json")
+    with open(p, "w") as f:
+        json.dump({"host": 0, "t": time.time()}, f)
+    assert Heartbeat.is_alive(p, timeout=5.0)
+
+
+def test_heartbeat_is_alive_stale(tmp_path):
+    p = str(tmp_path / "hb.json")
+    with open(p, "w") as f:
+        json.dump({"host": 0, "t": time.time() - 60.0}, f)
+    assert not Heartbeat.is_alive(p, timeout=1.0)
+
+
+def test_heartbeat_is_alive_missing(tmp_path):
+    assert not Heartbeat.is_alive(str(tmp_path / "nope.json"), timeout=1.0)
+
+
+def test_heartbeat_is_alive_corrupt(tmp_path):
+    """A torn/garbage beat file means dead, not crash — the supervisor
+    polls these on every liveness sweep."""
+    p = str(tmp_path / "hb.json")
+    with open(p, "w") as f:
+        f.write("{not json")
+    assert not Heartbeat.is_alive(p, timeout=1.0)
+    with open(p, "w") as f:
+        json.dump({"host": 0}, f)          # valid json, missing "t"
+    assert not Heartbeat.is_alive(p, timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_warmup_never_flags():
+    d = StragglerDetector(ratio=2.0, warmup=5)
+    assert not any(d.check(100.0 if i % 2 else 0.001) for i in range(5))
+    assert d.flagged == 0
+
+
+def test_straggler_outlier_flagged_and_ewma_unpolluted():
+    d = StragglerDetector(alpha=0.5, ratio=2.0, warmup=2)
+    for _ in range(5):
+        assert not d.check(1.0)
+    ewma_before = d.ewma
+    assert d.check(10.0)                   # outlier
+    assert d.ewma == ewma_before           # outliers don't move the EWMA
+    assert not d.check(1.0)                # back to normal
+    assert d.flagged == 1
+
+
+def test_straggler_tracks_slow_drift():
+    """A gradual slowdown (everything under ratio x EWMA) is absorbed by
+    the EWMA, not flagged — only jumps count."""
+    d = StragglerDetector(alpha=0.5, ratio=3.0, warmup=1)
+    flags = [d.check(t) for t in (1.0, 1.5, 2.0, 2.5, 3.0, 3.5)]
+    assert flags == [False] * 6
+    assert d.ewma > 2.0
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_guard_restores_prior_handler():
+    marker = []
+
+    def prev(signum, frame):
+        marker.append(signum)
+
+    old = signal.signal(signal.SIGTERM, prev)
+    try:
+        with PreemptionGuard() as g:
+            assert signal.getsignal(signal.SIGTERM) == g._handler
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert g.requested and marker == []
+        assert signal.getsignal(signal.SIGTERM) is prev
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert marker == [signal.SIGTERM]  # prior handler back in force
+    finally:
+        signal.signal(signal.SIGTERM, old)
+
+
+def test_preemption_guard_restores_on_exception():
+    before = signal.getsignal(signal.SIGTERM)
+    with pytest.raises(RuntimeError):
+        with PreemptionGuard():
+            raise RuntimeError("boom")
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+# ---------------------------------------------------------------------------
+# RestartableLoop
+# ---------------------------------------------------------------------------
+
+
+def test_restartable_loop_resume_offset():
+    seen, saves = [], []
+    loop = RestartableLoop(total_steps=7, ckpt_every=3,
+                           save_cb=saves.append, start_step=3)
+    end = loop.run(lambda s: seen.append(s) or {})
+    assert seen == [3, 4, 5, 6]            # resumes exactly past the ckpt
+    assert end == 7
+    assert saves == [6, 7]
+
+
+def test_restartable_loop_no_double_save_on_cadence_boundary():
+    """Regression: a loop whose last step lands ON the ckpt_every cadence
+    used to save that step twice (cadence save + unconditional final
+    save) — an atomic-rename storm and a wasted write at scale."""
+    saves = []
+    loop = RestartableLoop(total_steps=8, ckpt_every=4, save_cb=saves.append)
+    loop.run(lambda s: {})
+    assert saves == [4, 8]                 # 8 exactly once
+
+
+def test_restartable_loop_no_double_save_on_preempted_boundary():
+    """Same regression via the preemption path: SIGTERM arriving on a
+    cadence step must not save it twice either."""
+    saves = []
+    guard = PreemptionGuard()
+    loop = RestartableLoop(total_steps=100, ckpt_every=4,
+                           save_cb=saves.append, guard=guard)
+
+    def body(step):
+        if step == 3:                      # step 4 is a cadence boundary
+            guard.requested = True
+        return {}
+
+    end = loop.run(body)
+    assert end == 4
+    assert saves == [4]
+
+
+def test_restartable_loop_final_save_off_cadence():
+    saves = []
+    loop = RestartableLoop(total_steps=10, ckpt_every=4, save_cb=saves.append)
+    loop.run(lambda s: {})
+    assert saves == [4, 8, 10]             # off-cadence tail still saved
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_schedule_is_seed_deterministic():
+    kw = dict(p_crash=0.1, p_nan=0.1, p_straggle=0.2)
+    a = [FaultInjector(seed=5, **kw).next_fault() for _ in range(1)]
+    seq = [FaultInjector(seed=5, **kw) for _ in range(2)]
+    sched = [[inj.next_fault() for _ in range(200)] for inj in seq]
+    assert sched[0] == sched[1]
+    assert any(sched[0])                   # something actually fires
+    del a
+
+
+def test_fault_injector_fixed_draws_per_dispatch():
+    """The schedule is a pure function of (seed, dispatch index): turning
+    one fault kind off must not shift when the OTHERS fire."""
+    base = FaultInjector(seed=7, p_crash=0.05, p_straggle=0.2)
+    only = FaultInjector(seed=7, p_straggle=0.2)
+    n = 300
+    b = [base.next_fault() for _ in range(n)]
+    o = [only.next_fault() for _ in range(n)]
+    for i in range(n):
+        if b[i] == "straggle":             # crash shadows straggle at most
+            assert o[i] == "straggle"
+        if o[i] is None:
+            assert b[i] != "straggle"
+
+
+def test_fault_injector_explicit_steps_fire_once():
+    inj = FaultInjector(seed=0, crash_steps=(2,), nan_steps=(4,))
+
+    class Eng:
+        poisoned = 0
+
+        def poison_cache(self):
+            self.poisoned += 1
+
+    eng = Eng()
+    fired = []
+    for _ in range(8):
+        try:
+            inj(eng)
+            fired.append(None)
+        except InjectedFault:
+            fired.append("crash")
+    assert fired[2] == "crash" and fired.count("crash") == 1
+    assert eng.poisoned == 1
+    assert inj.log == [(2, "crash"), (4, "nan")]
+
+
+def test_fault_injector_straggle_uses_injected_sleep():
+    slept = []
+    inj = FaultInjector(seed=0, straggle_steps=(0, 1), straggle_s=0.5,
+                        sleep=slept.append)
+    inj(object())
+    inj(object())
+    assert slept == [0.5, 0.5]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manifest-last protocol
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.ones((3,), np.float32)}
+
+
+def test_save_pytree_writes_manifest(tmp_path):
+    p = str(tmp_path / "ck")
+    save_pytree(_tree(), p)
+    assert is_complete(p)
+    out = load_pytree(p, _tree())
+    np.testing.assert_array_equal(out["w"], _tree()["w"])
+
+
+def test_load_pytree_refuses_torn_dir(tmp_path):
+    """A dir missing its manifest is a partial write: load must raise
+    loudly instead of restoring garbage."""
+    p = str(tmp_path / "ck")
+    save_pytree(_tree(), p)
+    os.remove(os.path.join(p, MANIFEST))   # simulate the torn write
+    assert not is_complete(p)
+    with pytest.raises(ValueError, match="torn/incomplete"):
+        load_pytree(p, _tree())
+
+
+def test_manager_skips_torn_step_and_resumes_from_last_complete(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_write=False)
+    m.save(1, _tree())
+    m.save(2, _tree())
+    torn = os.path.join(str(tmp_path), "step_00000003")
+    os.makedirs(torn)                      # crashed writer: dir, no manifest
+    with open(os.path.join(torn, "leaves.npz"), "wb") as f:
+        f.write(b"partial")
+    assert m.all_steps() == [1, 2]
+    assert m.latest_step() == 2            # torn step 3 is invisible
+    out = m.restore(2, _tree())
+    np.testing.assert_array_equal(out["w"], _tree()["w"])
+
+
+def test_manager_gc_reaps_torn_dirs(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    torn = os.path.join(str(tmp_path), "step_00000001")
+    os.makedirs(torn)
+    m.save(2, _tree())                     # save triggers gc
+    assert not os.path.exists(torn)
+    assert m.all_steps() == [2]

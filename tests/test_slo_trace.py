@@ -1,0 +1,119 @@
+"""Arrival processes + open-loop replay + SLO rollup: pure host-side
+pieces of the latency-SLO harness (no model, no engine), so everything
+here is fast and exactly deterministic."""
+
+import numpy as np
+import pytest
+
+from repro.serving import (bursty_arrivals, make_trace, poisson_arrivals,
+                           replay)
+from repro.serving.frontend import slo_summary  # noqa: F401  (re-export gate)
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrivals_deterministic_and_increasing():
+    a = poisson_arrivals(64, 10.0, seed=3)
+    b = poisson_arrivals(64, 10.0, seed=3)
+    assert np.array_equal(a, b)
+    assert a.shape == (64,)
+    assert np.all(np.diff(a) > 0)          # strictly increasing offsets
+    assert not np.array_equal(a, poisson_arrivals(64, 10.0, seed=4))
+
+
+def test_poisson_mean_rate_matches():
+    n, rate = 4000, 25.0
+    a = poisson_arrivals(n, rate, seed=0)
+    assert n / a[-1] == pytest.approx(rate, rel=0.1)
+
+
+def test_bursty_arrivals_group_structure_and_mean_rate():
+    n, rate, burst = 4000, 25.0, 8
+    a = bursty_arrivals(n, rate, burst=burst, seed=0)
+    assert a.shape == (n,)
+    # synchronized groups: every member of a burst lands at one instant
+    groups = a.reshape(n // burst, burst)
+    assert np.all(groups == groups[:, :1])
+    assert np.all(np.diff(groups[:, 0]) > 0)
+    # same mean rate as the Poisson process it stresses against
+    assert n / a[-1] == pytest.approx(rate, rel=0.1)
+
+
+def test_bursty_tail_group_truncates():
+    a = bursty_arrivals(10, 5.0, burst=4, seed=1)
+    assert a.shape == (10,)
+    assert np.all(a[8:] == a[8])           # last (partial) group of 2
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(4, 0.0)
+    with pytest.raises(ValueError, match="rate"):
+        bursty_arrivals(4, -1.0)
+    with pytest.raises(ValueError, match="burst"):
+        bursty_arrivals(4, 1.0, burst=0)
+
+
+# ---------------------------------------------------------------------------
+# open-loop replay (virtual time)
+# ---------------------------------------------------------------------------
+
+
+class VirtualTime:
+    """clock+sleep pair where sleep() advances the clock instantly."""
+
+    def __init__(self):
+        self.t = 100.0                     # nonzero epoch: catches t0 bugs
+        self.sleeps = []
+
+    def clock(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.sleeps.append(dt)
+        self.t += dt
+
+
+def test_replay_submits_at_arrival_offsets():
+    vt = VirtualTime()
+    reqs = make_trace(4, vocab=32, seed=0)
+    arrivals = [0.5, 1.0, 1.0, 2.25]
+    seen = []
+    out = replay(lambda r: seen.append((vt.clock(), r.rid)) or r.rid,
+                 reqs, arrivals, clock=vt.clock, sleep=vt.sleep)
+    assert out == [0, 1, 2, 3]             # results in arrival order
+    assert seen == [(100.5, 0), (101.0, 1), (101.0, 2), (102.25, 3)]
+    assert vt.sleeps == [0.5, 0.5, 1.25]   # no sleep for the same-instant one
+
+
+def test_replay_open_loop_never_waits_when_behind():
+    """A slow submit (clock jumps inside it) must not delay later
+    arrivals further: overdue requests fire immediately — that is what
+    makes the load open-loop."""
+    vt = VirtualTime()
+    reqs = make_trace(3, vocab=32, seed=0)
+
+    def slow_submit(r):
+        vt.t += 5.0                        # server stalls inside submit
+        return r.rid
+
+    replay(slow_submit, reqs, [0.0, 1.0, 2.0],
+           clock=vt.clock, sleep=vt.sleep)
+    assert vt.sleeps == []                 # already behind: zero waiting
+
+
+def test_replay_speed_scales_offsets():
+    vt = VirtualTime()
+    reqs = make_trace(2, vocab=32, seed=0)
+    replay(lambda r: r.rid, reqs, [1.0, 3.0], speed=2.0,
+           clock=vt.clock, sleep=vt.sleep)
+    assert vt.sleeps == [0.5, 1.0]         # offsets halved at 2x speed
+
+
+def test_replay_length_mismatch_raises():
+    reqs = make_trace(3, vocab=32, seed=0)
+    with pytest.raises(ValueError, match="3 requests vs 2 arrivals"):
+        replay(lambda r: None, reqs, [0.0, 1.0])
