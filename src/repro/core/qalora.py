@@ -70,6 +70,24 @@ def adapter_delta(x: jax.Array, p: QALoRAParams, s: float, group_size: int) -> j
     return (pooled @ p.a.astype(x.dtype)) @ p.b.astype(x.dtype) * s
 
 
+def bank_adapter_delta(x: jax.Array, a_bank: jax.Array, b_bank: jax.Array,
+                       ids: jax.Array, s: float, group_size: int) -> jax.Array:
+    """Per-row adapter delta gathered from stacked banks (multi-tenant).
+
+    ``a_bank [N, L, r]`` / ``b_bank [N, r, D_out]`` stack N adapters'
+    ``(A, B)`` pairs; ``ids [B]`` selects one adapter per leading row of
+    ``x [B, ..., D_in]``.  Row ``i`` gets ``s * pool(x_i) @ A[ids_i] @
+    B[ids_i]`` — the einsum-gather reference for the fused per-slot
+    kernel (``repro.kernels.ops.qalora_slot_matmul``).  Bank row 0 is the
+    reserved null adapter (all-zero ``A``/``B`` -> delta exactly 0), so
+    adapter-less requests ride the same path."""
+    pooled = group_pool(x.astype(jnp.float32), group_size)  # [B, ..., L]
+    a_sel = jnp.take(a_bank, ids, axis=0).astype(jnp.float32)  # [B, L, r]
+    b_sel = jnp.take(b_bank, ids, axis=0).astype(jnp.float32)  # [B, r, D]
+    t = jnp.einsum("b...l,blr->b...r", pooled, a_sel)
+    return (jnp.einsum("b...r,brd->b...d", t, b_sel) * s).astype(x.dtype)
+
+
 def qalora_forward(
     x: jax.Array,
     qt: QuantizedLinear,

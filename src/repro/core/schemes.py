@@ -533,6 +533,61 @@ class QALoRAScheme(LinearScheme):
         return flops, byts
 
 
+@register_scheme("qalora_slot")
+class QALoRASlotScheme(LinearScheme):
+    """Multi-tenant serving scheme: one frozen INT-N base shared by a
+    stacked bank of QA-LoRA adapters, with a per-row adapter index.
+
+    ``data`` holds ``{"q": QuantizedLinear, "a": [N, L, r] bank,
+    "b": [N, r, D_out] bank, "ids": [B] int32}`` (plus leading stack
+    dims on all four when the linear is scanned/stacked — ``ids`` is
+    broadcast across the stack so per-layer slicing works).  Row ``i``
+    of the activation batch computes ``x_i @ dequant(q) + s *
+    pool(x_i) @ A[ids_i] @ B[ids_i]``; bank row 0 is the reserved null
+    adapter (zeros -> delta exactly 0).  Built ONLY by
+    :class:`repro.serving.adapters.AdapterStore` (``with_slot_ids``) —
+    the ids ride inside the params pytree, so changing the slot->adapter
+    mapping swaps an array value without changing the pytree structure:
+    the engine's compiled steps never retrace on an adapter-mix change.
+    """
+
+    def init(self, key, d_in, d_out, pol):
+        raise NotImplementedError(
+            "qalora_slot linears are not initialized directly; build them "
+            "from a base tree via repro.serving.adapters.AdapterStore")
+
+    def apply(self, data, x, pol):
+        qt, ids = data["q"], data["ids"]
+        if pol.use_kernel:
+            from repro.kernels import qalora_slot_matmul  # lazy
+            ids_full = jnp.broadcast_to(
+                ids.reshape(ids.shape + (1,) * (x.ndim - ids.ndim)),
+                x.shape[:-1])
+            return qalora_slot_matmul(x, qt, data["a"], data["b"],
+                                      ids_full, s=pol.s)
+        base = x @ quant_lib.dequantize(qt, x.dtype)
+        return base + qalora_lib.bank_adapter_delta(
+            x, data["a"], data["b"], ids, pol.s, qt.group_size)
+
+    def merge(self, data, pol):
+        raise NotImplementedError(
+            "a qalora_slot linear banks MANY adapters — there is no single "
+            "merge target; use AdapterStore.merged(name) for the merged "
+            "single-adapter reference tree")
+
+    def stack_ndim(self, data):
+        return data["q"].qweight.ndim - 2
+
+    def flops_bytes(self, data, pol, m=1):
+        qt = data["q"]
+        k, n = qt.d_in, qt.d_out
+        g, r = qt.n_groups, data["a"].shape[-1]
+        # each row reads the shared base once plus ITS adapter's rows
+        flops = 2 * m * k * n + 2 * m * r * (g + n)
+        byts = _qt_bytes(qt) + m * r * (g + n) * _dsize(data["b"].dtype)
+        return flops, byts
+
+
 @register_scheme("intq")
 class IntQScheme(LinearScheme):
     """Bare INT-N group-wise linear: merged QA-LoRA output or PTQ result."""

@@ -27,7 +27,8 @@ from repro.core.qalora import QALoRAParams
 from . import autotune
 from .qmatmul import qmatmul_pallas
 from .qalora_fused import qalora_matmul_pallas
-from .qmatvec import GEMV_MAX_M, qmatvec_pallas, qalora_matvec_pallas
+from .qmatvec import (GEMV_MAX_M, qmatvec_pallas, qalora_matvec_pallas,
+                      qalora_slot_matvec_pallas)
 
 
 def _default_interpret() -> bool:
@@ -158,3 +159,38 @@ def qalora_matmul(x, qt: QuantizedLinear, p: QALoRAParams, s: float = 1.0,
         block_m=bm, block_n=bn, block_k=bk,
         out_dtype=out_dtype or x.dtype, interpret=interpret)
     return y[:m].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "out_dtype", "interpret"))
+def qalora_slot_matmul(x, qt: QuantizedLinear, a_bank, b_bank, ids,
+                       s: float = 1.0, out_dtype=None, interpret=None):
+    """Multi-tenant fused forward: y[i] = x[i] @ dequant(qt) +
+    s * pool(x[i]) @ A[ids[i]] @ B[ids[i]].
+
+    ``a_bank [N, L, r]`` / ``b_bank [N, r, D_out]`` stack N adapters;
+    ``ids`` carries one adapter index per leading row of x and must have
+    shape ``x.shape[:-1]`` (broadcast per-slot ids over ride-along dims
+    before calling).  Decode shapes (flattened M <= GEMV_MAX_M) run the
+    fused per-slot gather kernel in ONE dispatch; larger M (prefill)
+    takes the base matmul kernel plus the einsum-gather adapter
+    reference — at prefill M the adapter epilogue is a rounding error
+    next to the base GEMM, so the gather kernel's VMEM bank residency is
+    not worth a second matmul variant."""
+    interpret = _default_interpret() if interpret is None else interpret
+    k, n = qt.d_in, qt.d_out
+    rank = a_bank.shape[-1]
+    assert ids.shape == x.shape[:-1], (ids.shape, x.shape)
+    lead, m, use_gemv = _dispatch(x)
+    if use_gemv:
+        _, bn, bk = pick_blocks(m, k, n, qt.bits, qt.group_size, rank)
+        y = qalora_slot_matvec_pallas(
+            x.reshape(m, k), qt.qweight, qt.scale, qt.zero,
+            a_bank, b_bank, ids.reshape(m), s=float(s), bits=qt.bits,
+            group_size=qt.group_size, block_n=bn, block_k=bk,
+            out_dtype=out_dtype or x.dtype, interpret=interpret)
+        return y.reshape(*lead, n)
+    from repro.core.qalora import bank_adapter_delta
+    base = qmatmul(x, qt, out_dtype=out_dtype, interpret=interpret)
+    delta = bank_adapter_delta(x.reshape(m, k), a_bank, b_bank,
+                               ids.reshape(m), float(s), qt.group_size)
+    return base + delta.reshape(base.shape).astype(base.dtype)

@@ -14,6 +14,12 @@ rank-r adapter epilogue in a second tiny VMEM scratch, mirroring
 `qalora_fused.py`: pool_sum(x) @ A accumulates across K steps and the
 `@ B` epilogue lands once per N tile on the last K step.
 
+The multi-tenant variant (`qalora_slot_matvec_pallas`) is the punica-style
+batched segmented-rank epilogue: `(A, B)` live in stacked device-resident
+banks `[n_adapters, ...]` and each row of x carries an adapter index
+(SMEM scalars), gathered with `pl.ds` inside the kernel — one dispatch
+applies a DIFFERENT adapter per decode slot over the shared INT-N base.
+
 Grid = (N/bn, K/bk), K innermost; f32 accumulation in VMEM scratch.
 Constraints (asserted below, so a stale/hand-edited autotune cache entry
 fails loudly instead of silently dropping K/N tail blocks): bk | K,
@@ -162,3 +168,92 @@ def qalora_matvec_pallas(x, qweight, scale, zero, a, b, *, s: float,
         ],
         interpret=interpret,
     )(x, qweight, scale, zero, a, b)
+
+
+def _qalora_slot_matvec_kernel(ids_ref, x_ref, qw_ref, scale_ref, zero_ref,
+                               a_ref, b_ref, o_ref, acc_ref, lacc_ref, *,
+                               bits: int, group_size: int, n_k: int,
+                               s: float, m: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        lacc_ref[...] = jnp.zeros_like(lacc_ref)
+
+    x = x_ref[...]
+    _, bk = x.shape
+    w = _dequant_block(qw_ref[...], scale_ref[...], zero_ref[...],
+                       bits, bk, group_size, dtype=x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # per-row adapter gather: each row contracts its pooled activations
+    # with ITS OWN adapter's A-slice from the bank (dynamic leading-axis
+    # slice; m <= GEMV_MAX_M keeps this a tiny unrolled loop)
+    pooled = x.reshape(m, bk // group_size, group_size).sum(axis=-1)
+    for i in range(m):
+        a_i = a_ref[pl.ds(ids_ref[i], 1)][0].astype(x.dtype)  # [bk/g, r]
+        lacc_ref[i:i + 1, :] += jax.lax.dot_general(
+            pooled[i:i + 1, :], a_i, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        for i in range(m):
+            b_i = b_ref[pl.ds(ids_ref[i], 1)][0]  # [r, bn]
+            adapter = jax.lax.dot_general(
+                lacc_ref[i:i + 1, :].astype(b_i.dtype), b_i,
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+            o_ref[i:i + 1, :] = (acc_ref[i:i + 1, :]
+                                 + s * adapter).astype(o_ref.dtype)
+
+
+def qalora_slot_matvec_pallas(x, qweight, scale, zero, a_bank, b_bank, ids,
+                              *, s: float, bits: int, group_size: int,
+                              block_n: int, block_k: int,
+                              out_dtype=None, interpret: bool = False):
+    """Fused y[i] = x[i] @ dequant(W_q) + s * pool(x[i]) @ A[ids[i]] @
+    B[ids[i]]: one dispatch, a different adapter per row (decode slot).
+
+    ``a_bank [N, L, r]`` / ``b_bank [N, r, D_out]`` ride whole in VMEM
+    (adapter banks are tiny next to the packed base); ``ids [m]`` int32
+    lives in SMEM for the in-kernel gather."""
+    m, k_dim = x.shape
+    n = qweight.shape[1]
+    assert m <= GEMV_MAX_M, (m, GEMV_MAX_M)
+    assert ids.shape == (m,), (ids.shape, m)
+    n_adapters, _, rank = a_bank.shape
+    assert b_bank.shape[:2] == (n_adapters, rank), (a_bank.shape, b_bank.shape)
+    cpb = codes_per_byte(bits)
+    assert k_dim % block_k == 0 and n % block_n == 0, (k_dim, n, block_k, block_n)
+    assert block_k % group_size == 0 and block_k % cpb == 0, (block_k, group_size, cpb)
+    n_k = k_dim // block_k
+    grid = (n // block_n, n_k)
+    out_dtype = out_dtype or x.dtype
+
+    kernel = functools.partial(
+        _qalora_slot_matvec_kernel, bits=bits, group_size=group_size,
+        n_k=n_k, s=s, m=m)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # ids [m]
+            pl.BlockSpec((m, block_k), lambda j, k: (0, k)),
+            pl.BlockSpec((block_k // cpb, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((n_adapters, block_k // group_size, rank),
+                         lambda j, k: (0, k, 0)),
+            pl.BlockSpec((n_adapters, rank, block_n), lambda j, k: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, block_n), jnp.float32),
+            pltpu.VMEM((m, rank), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids.astype(jnp.int32), x, qweight, scale, zero, a_bank, b_bank)

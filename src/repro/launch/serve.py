@@ -55,6 +55,9 @@ CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
       --engine frontend --requests 8 --slots 2 --gen-len 8 \
       --queue-cap 4 --deadline-ms 30000 --inject-faults
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+      --engine continuous --requests 9 --slots 3 --gen-len 8 \
+      --adapters alice=demo:1,bob=demo:2
 """
 
 from __future__ import annotations
@@ -198,6 +201,18 @@ def main(argv=None):
                          "mid-trace engine crash + straggler latency); "
                          "recovery replays in-flight requests "
                          "token-identically")
+    ap.add_argument("--adapters", default="",
+                    help="multi-tenant serving (continuous/frontend only): "
+                         "comma list of name=spec adapter packs served "
+                         "UNMERGED over one shared quantized base (a "
+                         "different adapter per slot in the same "
+                         "dispatch).  spec is 'demo:<seed>' — synthesize "
+                         "a distinct fine-tune by perturbing the adapters "
+                         "with seeded noise — or a checkpoint path saved "
+                         "by repro.checkpoint.save_pytree from a trained "
+                         "tagged tree.  Requests cycle through the "
+                         "tenants (plus the bare base) round-robin, e.g. "
+                         "--adapters alice=demo:1,bob=demo:2")
     ap.add_argument("--loop", action="store_true",
                     help="use the legacy per-token loop instead of scan")
     ap.add_argument("--policy", default="",
@@ -226,6 +241,49 @@ def main(argv=None):
     params = bump(params)
 
     merged = merge_model(params, pol)
+
+    store, tenants = None, []
+    if args.adapters:
+        if args.engine not in ("continuous", "frontend"):
+            ap.error("--adapters needs --engine continuous|frontend "
+                     "(per-slot adapters only apply to slotted serving)")
+        from repro.serving import AdapterStore
+        specs = [s for s in args.adapters.split(",") if s]
+        try:
+            store = AdapterStore(params, capacity=max(4, len(specs)))
+        except ValueError as e:
+            ap.error(f"--adapters: {e}")
+        for spec in specs:
+            name, eq, src_ = spec.partition("=")
+            if not eq or not name or not src_:
+                ap.error(f"--adapters entry {spec!r} is not name=spec")
+            if src_.startswith("demo:"):
+                seed = int(src_[len("demo:"):] or "0")
+
+                def noise(path, x, _seed=seed, _cnt=[0]):
+                    if any(getattr(k, "key", None) == "ad" for k in path):
+                        _cnt[0] += 1
+                        k = jax.random.fold_in(
+                            jax.random.PRNGKey(1000 + _seed), _cnt[0])
+                        return x + 0.02 * jax.random.normal(
+                            k, x.shape, x.dtype)
+                    return x
+
+                tree = jax.tree_util.tree_map_with_path(noise, params)
+            else:
+                from repro.checkpoint import load_pytree
+                tree = load_pytree(src_, like=params)
+            store.register(name, tree)
+            tenants.append(name)
+        print(f"[serve] adapter store: {store.n_adapters} tenants "
+              f"{tenants} over one int{pol.default.bits} base "
+              f"(capacity {store.capacity}, + null adapter)")
+        merged = store.base
+
+    # requests cycle tenants round-robin, with a bare-base (null
+    # adapter) request in the mix so eviction back to id 0 is exercised
+    who = (lambda i: ([*tenants, None])[i % (len(tenants) + 1)]) \
+        if tenants else (lambda i: None)
 
     b = args.requests
     # an empty prompt still needs one token to condition on: feed BOS (=0)
@@ -268,15 +326,18 @@ def main(argv=None):
                         queue_cap=args.queue_cap,
                         default_deadline_s=ms(args.deadline_ms),
                         default_ttft_deadline_s=ms(args.ttft_deadline_ms),
-                        injector=injector, guard=guard)
-                except NotImplementedError:
+                        injector=injector, guard=guard, adapters=store)
+                except NotImplementedError as e:
+                    if store is not None:
+                        ap.error(f"--adapters with --engine frontend: {e}")
                     ap.error(
                         f"--engine frontend does not support the "
                         f"{cfg.family!r} family (arch {cfg.name}); fall "
                         f"back to --engine static, and see the "
                         f"family-support matrix in README.md 'Serving "
                         f"engine' for what each engine covers")
-                tickets = [fe.submit(prompts[i], args.gen_len)
+                tickets = [fe.submit(prompts[i], args.gen_len,
+                                     adapter_id=who(i))
                            for i in range(b)]
                 counts = fe.run_until_drained()
             s = slo_summary(fe)
@@ -313,8 +374,11 @@ def main(argv=None):
                 eng = ContinuousEngine(lm, merged, n_slots=slots,
                                        max_len=max_len,
                                        prefill_chunk=args.prefill_chunk,
-                                       decode_burst=args.decode_burst)
-            except NotImplementedError:
+                                       decode_burst=args.decode_burst,
+                                       adapters=store)
+            except NotImplementedError as e:
+                if store is not None:
+                    ap.error(f"--adapters with --engine continuous: {e}")
                 # name the family and point at the docs instead of letting
                 # the bare engine-constructor error surface to a CLI user
                 ap.error(
@@ -323,14 +387,16 @@ def main(argv=None):
                     f"to --engine static, and see the family-support "
                     f"matrix in README.md 'Serving engine' for what each "
                     f"engine covers")
-            rids = [eng.submit(prompts[i], args.gen_len)
+            rids = [eng.submit(prompts[i], args.gen_len, adapter_id=who(i))
                     for i in range(b)]
             outputs = eng.run()
             st = eng.stats
             gen = np.asarray([outputs[r] for r in rids], dtype=np.int32)
+            mix = (f", {store.n_adapters}+null tenants per-slot"
+                   if store is not None else "")
             dt, path = st.seconds, (f"continuous, {slots} slots, "
                                     f"occupancy {st.occupancy:.0%}, "
-                                    f"{st.dispatches} dispatches")
+                                    f"{st.dispatches} dispatches{mix}")
         elif use_loop:
             gen, dt = generate_loop_reference(
                 lm, merged, prompts, args.gen_len, max_len)

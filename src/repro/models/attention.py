@@ -50,10 +50,18 @@ def _tp_size() -> int:
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
-                    chunk_q=256, chunk_k=1024, scale=None):
+                    chunk_q=256, chunk_k=1024, scale=None, kv_len=None):
     """q: [B,Sq,H,Dq]  k: [B,Sk,KvH,Dq]  v: [B,Sk,KvH,Dv] -> [B,Sq,H,Dv].
 
     H must be a multiple of KvH (GQA).  Memory: O(chunk_q * chunk_k) scores.
+
+    ``kv_len`` ([B] traced int32, optional) masks keys at positions >=
+    kv_len[b] — the ragged-source hook that lets a BIDIRECTIONAL caller
+    (the encdec encoder) zero-pad Sk to a bucketed shape without padding
+    rows leaking into valid outputs.  Query rows >= kv_len[b] still
+    attend (to the valid keys), producing garbage-but-finite output the
+    caller must slice away; masked keys hit exp(NEG_INF) == 0 exactly,
+    so valid rows are bit-identical to the unpadded call.
 
     PERF: when the kv-head count can't shard over the model axis but the
     full head count can, the GQA [H]->[KvH,G] grouping strands the score
@@ -97,6 +105,9 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
                            k_blk.astype(jnp.float32)) * scale
             msk = _mask(qpos, kpos, causal, window)
             s = jnp.where(msk[None, None, None], s, NEG_INF)
+            if kv_len is not None:
+                km = kpos[None, :] < kv_len[:, None]          # [B, ck]
+                s = jnp.where(km[:, None, None, None, :], s, NEG_INF)
             m_new = jnp.maximum(m_run, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m_run - m_new)
@@ -202,17 +213,20 @@ def _qkv(p, x, cfg: AttnConfig, pol, positions, theta=None):
 
 
 def gqa_apply(p, x, cfg: AttnConfig, pol: QuantPolicy, positions=None,
-              window=None, theta=None, causal=True, chunk_q=256, chunk_k=1024):
+              window=None, theta=None, causal=True, chunk_q=256, chunk_k=1024,
+              kv_len=None):
     """Training / prefill self-attention; returns (out, new_kv).
 
-    ``window``/``theta`` override cfg (may be traced per-layer scalars)."""
+    ``window``/``theta`` override cfg (may be traced per-layer scalars).
+    ``kv_len`` ([B], optional) masks keys >= kv_len[b] — see
+    :func:`flash_attention` (ragged padded sources)."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     q, k, v = _qkv(p, x, cfg, pol, positions, theta)
     window = cfg.window if window is None else window
     o = flash_attention(q, k, v, causal=causal, window=window,
-                        chunk_q=chunk_q, chunk_k=chunk_k)
+                        chunk_q=chunk_q, chunk_k=chunk_k, kv_len=kv_len)
     out = linear_apply(p["wo"], o.reshape(b, s, -1), pol)
     return out, (k, v)
 

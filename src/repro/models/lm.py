@@ -460,14 +460,21 @@ class LM:
 
     # ---------------- encoder (enc-dec) ----------------
 
-    def _encode(self, params, src):
+    def _encode(self, params, src, src_len=None):
+        """``src_len`` ([B] traced int32, optional): valid frame count per
+        row.  The encoder is bidirectional, so zero-padded frames WOULD
+        leak into every valid output — masking keys >= src_len[b] keeps
+        valid rows bit-identical to the unpadded call (padded output rows
+        are garbage-but-finite; callers slice them away).  This is what
+        lets the serving engine bucket source lengths to a bounded set of
+        compiled shapes."""
         cfg, pol = self.cfg, self.cfg.quant
         x = constrain(src, (("pod", "data"), None, None))
 
         def body(xc, blk):
             def fn(b_, x_):
                 a, _ = gqa_apply(b_["attn"], rmsnorm(b_["ln1"], x_), _attn_cfg(cfg),
-                                 pol, causal=False,
+                                 pol, causal=False, kv_len=src_len,
                                  chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k)
                 x_ = x_ + a
                 return x_ + mlp_apply(b_["mlp"], rmsnorm(b_["ln2"], x_), pol, cfg.act)
@@ -498,14 +505,21 @@ class LM:
         x, caches = cscan(body, x, params["dec_blocks"], name="dec_layers")
         return x, caches
 
-    def encode_cross(self, params, src):
+    def encode_cross(self, params, src, src_len=None):
         """Run the encoder over ``src`` [B,Ss,d] and precompute every
         decoder layer's cross K/V from the memory: returns (k, v), each
         [L,B,Ss,KvH,hd].  The continuous engine calls this ONCE per
         admitted encdec request and pins the result into the slot's
-        frozen cross cache — cross K/V never recompute during decode."""
+        frozen cross cache — cross K/V never recompute during decode.
+
+        ``src_len`` ([B] traced int32, optional) marks the valid frames
+        of a zero-padded ``src``: rows >= src_len[b] are masked out of
+        the (bidirectional) encoder attention, so valid memory rows —
+        and the cross K/V derived from them — are bit-identical to
+        encoding the unpadded source.  Callers pin only the first
+        src_len rows (padded rows carry garbage-but-finite K/V)."""
         cfg, pol = self.cfg, self.cfg.quant
-        memory = self._encode(params, src)
+        memory = self._encode(params, src, src_len)
 
         def body(carry, blk):
             km, vm = cross_kv(blk["cross"], memory, _attn_cfg(cfg), pol)

@@ -21,8 +21,21 @@ crash recovery, graceful drain):
                          queue_cap=32).start()
     t = fe.submit(prompt_ids, 16, deadline_s=2.0)   # any thread
     fe.stop()                    # drain; t.status / t.tokens / t.ttft
+
+Multi-tenant serving (one quantized base, many QA-LoRA adapters): build
+an :class:`AdapterStore` over the merged base, register named adapter
+packs, and bind requests to adapters per slot — one dispatch applies a
+different adapter per slot via the banked gather epilogue:
+
+    from repro.serving import AdapterStore
+    store = AdapterStore(base_params, capacity=8)
+    store.register("tenant-a", trained_tree_a)
+    eng = ContinuousEngine(lm, store.base, n_slots=4, max_len=64,
+                           adapters=store)
+    rid = eng.submit(prompt_ids, 16, adapter_id="tenant-a")
 """
 
+from .adapters import AdapterStore, extract_pack
 from .engine import ContinuousEngine, EngineCorrupted, EngineStats
 from .frontend import (RequestStatus, ServingFrontend, Ticket,
                        TERMINAL_STATUSES, slo_summary)
@@ -30,8 +43,8 @@ from .scheduler import Request, Scheduler, Slot
 from .trace import (bursty_arrivals, make_trace, poisson_arrivals, replay,
                     static_schedule)
 
-__all__ = ["ContinuousEngine", "EngineCorrupted", "EngineStats",
-           "Request", "RequestStatus", "Scheduler", "ServingFrontend",
-           "Slot", "Ticket", "TERMINAL_STATUSES", "bursty_arrivals",
-           "make_trace", "poisson_arrivals", "replay", "slo_summary",
-           "static_schedule"]
+__all__ = ["AdapterStore", "ContinuousEngine", "EngineCorrupted",
+           "EngineStats", "Request", "RequestStatus", "Scheduler",
+           "ServingFrontend", "Slot", "Ticket", "TERMINAL_STATUSES",
+           "bursty_arrivals", "extract_pack", "make_trace",
+           "poisson_arrivals", "replay", "slo_summary", "static_schedule"]

@@ -1,0 +1,351 @@
+"""AdapterStore: one quantized base, many QA-LoRA adapters (multi-tenant).
+
+QA-LoRA's deployment property cuts both ways: a group-pooled adapter
+either merges EXACTLY into the INT-N base (zeros update only — the
+single-tenant path every earlier PR serves), or it stays cleanly
+separable from it.  This module serves the separable side: one
+device-resident quantized base shared by a fleet of fine-tunes, with a
+DIFFERENT adapter applied per engine slot in the same dispatch.
+
+Layout
+------
+The store walks the (merged) base tree once and, for every quantized
+linear, allocates stacked zero banks
+
+    a_bank [lead..., N, L, r]      b_bank [lead..., N, r, D_out]
+
+where ``N = capacity + 1`` and bank row 0 is the reserved NULL adapter
+(zeros -> delta exactly 0), so adapter-less requests ride the same
+gather path.  :meth:`register` extracts a named adapter pack from a
+trained tagged param tree (via the scheme registry's
+``trainable_paths``), validates rank/group/policy compatibility against
+the base layout, and writes the pack into one bank row.
+:meth:`with_slot_ids` assembles the SERVING TREE: every banked linear
+becomes a ``qalora_slot``-scheme :class:`~repro.core.schemes.LinearParams`
+holding ``{q, a, b, ids}`` — the per-slot adapter indices ride inside
+the params pytree, so remapping slots to adapters (or registering into a
+bank row) swaps array VALUES under an unchanged pytree structure: the
+engine's compiled steps never retrace on an adapter-mix change.
+
+Capacity & eviction
+-------------------
+``capacity`` bounds concurrently-registered adapters.  Registering past
+it evicts the least-recently-used adapter whose id is NOT live (live =
+referenced by a queued or in-flight request — the engine refreshes this
+via :meth:`set_live`); if every resident adapter is live, register fails
+loudly.  Explicit :meth:`evict` refuses live adapters for the same
+reason.  Evicted rows are zeroed, so a stale id gathers the null
+adapter instead of silently serving the previous tenant's weights.
+
+References: punica-style batched multi-LoRA gather; "On-the-Fly
+Adaptation to Quantization" and LoTA-QAF (adapter diversity over a
+fixed quantized base) — see PAPERS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qalora as qalora_lib
+from repro.core.schemes import (LinearParams, QuantPolicy, get_scheme,
+                                map_linears, merge_tree)
+
+
+@dataclasses.dataclass
+class _Bank:
+    """Per-path stacked adapter storage (device-resident)."""
+
+    a: jax.Array          # [lead..., N, L, r]
+    b: jax.Array          # [lead..., N, r, D_out]
+    lead: Tuple[int, ...]
+    policy: QuantPolicy   # the base linear's resolved policy at this path
+
+
+def extract_pack(params) -> Dict[str, qalora_lib.QALoRAParams]:
+    """Pull ``path -> QALoRAParams`` out of a trained tagged tree.
+
+    Uses the scheme registry's ``trainable_paths`` to find adapter-
+    bearing linears; only group-pooled QA-LoRA adapters can share a
+    quantized base, so any other adapter scheme fails loudly."""
+    pack: Dict[str, qalora_lib.QALoRAParams] = {}
+
+    def fn(path, lp: LinearParams):
+        keys = get_scheme(lp.scheme).trainable_paths(lp.data)
+        if not keys:
+            return lp
+        if lp.scheme != "qalora":
+            raise ValueError(
+                f"AdapterStore only banks group-pooled QA-LoRA adapters; "
+                f"{path!r} holds trainable scheme {lp.scheme!r} (its delta "
+                f"is not group-constant, so it cannot share the INT-N "
+                f"base) — merge or convert that tree first")
+        pack[path] = lp.data["ad"]
+        return lp
+
+    map_linears(params, fn)
+    if not pack:
+        raise ValueError(
+            "no QA-LoRA adapters found in the tree (no scheme with "
+            "trainable paths); is this a merged/base tree?")
+    return pack
+
+
+class AdapterStore:
+    """Named QA-LoRA adapter packs over one shared quantized base.
+
+    ``base_params`` is merged on entry (idempotent for pristine bases),
+    so the stored base is the bare INT-N tree every registered adapter
+    deltas against.  ``capacity`` = max concurrently-registered
+    adapters (bank rows = capacity + 1; row 0 is the reserved null
+    adapter).  ``bank_dtype`` defaults to each path's policy adapter
+    dtype."""
+
+    NULL_ID = 0
+
+    def __init__(self, base_params, *, capacity: int = 8, bank_dtype=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        self.capacity = capacity
+        self.base = merge_tree(base_params)
+        self.version = 0          # bumped on every bank mutation
+        self._banks: Dict[str, _Bank] = {}
+        self._names: Dict[str, int] = {}
+        self._by_id: Dict[int, str] = {}
+        self._live: set = set()
+        self._tick = 0
+        self._last_used: Dict[int, int] = {}
+        n = capacity + 1
+
+        def alloc(path, lp: LinearParams):
+            if lp.scheme != "intq":
+                return lp  # fp / exempt linears carry no adapter bank
+            qt = lp.data["q"]
+            lead = tuple(qt.qweight.shape[:-2])
+            l_groups = qt.scale.shape[-2]
+            d_out = qt.qweight.shape[-1]
+            rank = lp.policy.rank
+            if rank < 1:
+                raise ValueError(
+                    f"base linear {path!r} has policy rank {rank}; the "
+                    f"store needs rank >= 1 to size its adapter banks")
+            dt = bank_dtype or lp.policy.dtype
+            self._banks[path] = _Bank(
+                a=jnp.zeros(lead + (n, l_groups, rank), dt),
+                b=jnp.zeros(lead + (n, rank, d_out), dt),
+                lead=lead, policy=lp.policy)
+            return lp
+
+        map_linears(self.base, alloc)
+        if not self._banks:
+            raise ValueError(
+                "base tree has no quantized (intq) linears to bank "
+                "adapters over; quantize it first (e.g. an int4 PolicyTree)")
+
+    # ---------------- introspection ----------------
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._names)
+
+    @property
+    def n_adapters(self) -> int:
+        return len(self._names)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._names
+
+    def resolve(self, adapter: Union[int, str, None]) -> int:
+        """Name or id -> registered id; loud on anything unknown."""
+        if adapter is None:
+            return self.NULL_ID
+        if isinstance(adapter, str):
+            if adapter not in self._names:
+                raise ValueError(
+                    f"unknown adapter {adapter!r}; registered: "
+                    f"{sorted(self._names)}")
+            return self._names[adapter]
+        aid = int(adapter)
+        if aid != self.NULL_ID and aid not in self._by_id:
+            raise ValueError(
+                f"unknown adapter id {aid}; registered ids: "
+                f"{sorted(self._by_id)} (0 is the null adapter)")
+        return aid
+
+    def name_of(self, aid: int) -> Optional[str]:
+        return None if aid == self.NULL_ID else self._by_id.get(aid)
+
+    # ---------------- lifecycle ----------------
+
+    def touch(self, aid: int):
+        """LRU bump (the engine calls this when a request binds ``aid``)."""
+        if aid in self._by_id:
+            self._tick += 1
+            self._last_used[aid] = self._tick
+
+    def set_live(self, ids: Iterable[int]):
+        """Ids referenced by queued/in-flight requests; LRU eviction and
+        :meth:`evict` refuse these."""
+        self._live = {int(i) for i in ids if int(i) != self.NULL_ID}
+
+    def _allocate_id(self, name: str) -> int:
+        free = [i for i in range(1, self.capacity + 1)
+                if i not in self._by_id]
+        if free:
+            return free[0]
+        victims = sorted((i for i in self._by_id if i not in self._live),
+                         key=lambda i: self._last_used.get(i, 0))
+        if not victims:
+            raise RuntimeError(
+                f"AdapterStore is full ({self.capacity} adapters) and every "
+                f"resident adapter is live (queued or in-flight); cannot "
+                f"register {name!r} — drain or raise capacity")
+        self.evict(self._by_id[victims[0]])
+        return self._allocate_id(name)
+
+    def register(self, name: str, trained_params) -> int:
+        """Extract ``name``'s adapter pack from a trained tagged tree,
+        validate it against the base layout, and write it into a bank
+        row (LRU-evicting a non-live adapter when full).  Re-registering
+        an existing name overwrites its row in place.  Returns the id."""
+        pack = extract_pack(trained_params)
+        unknown = sorted(set(pack) - set(self._banks))
+        if unknown:
+            raise ValueError(
+                f"adapter {name!r} carries paths the base does not bank: "
+                f"{unknown} (base banks {sorted(self._banks)}); the "
+                f"adapter must be trained against this base's PolicyTree")
+        for path, ad in pack.items():
+            bank = self._banks[path]
+            want_a = bank.lead + bank.a.shape[len(bank.lead) + 1:]
+            want_b = bank.lead + bank.b.shape[len(bank.lead) + 1:]
+            if tuple(ad.a.shape) != want_a or tuple(ad.b.shape) != want_b:
+                raise ValueError(
+                    f"adapter {name!r} at {path!r}: A/B shapes "
+                    f"{tuple(ad.a.shape)}/{tuple(ad.b.shape)} do not match "
+                    f"the base bank layout {want_a}/{want_b} (rank "
+                    f"{bank.a.shape[-1]}, {bank.a.shape[-2]} groups)")
+        self._validate_policies(name, trained_params)
+        aid = self._names.get(name)
+        if aid is None:
+            aid = self._allocate_id(name)
+            self._names[name] = aid
+            self._by_id[aid] = name
+        # index the N axis (third-from-last), not the trailing one
+        idx = (Ellipsis, aid, slice(None), slice(None))
+        for path, ad in pack.items():
+            bank = self._banks[path]
+            bank.a = bank.a.at[idx].set(ad.a.astype(bank.a.dtype))
+            bank.b = bank.b.at[idx].set(ad.b.astype(bank.b.dtype))
+        self.touch(aid)
+        self.version += 1
+        return aid
+
+    def _validate_policies(self, name: str, trained_params):
+        """The adapter was trained against SOME quantized base; its
+        per-path policy (bits / group / scale s) must match ours, or the
+        merged-vs-unmerged equivalence silently breaks."""
+        def fn(path, lp: LinearParams):
+            bank = self._banks.get(path)
+            if bank is None or lp.scheme != "qalora":
+                return lp
+            bp, ap = bank.policy, lp.policy
+            bad = [f"{f}: base={getattr(bp, f)} adapter={getattr(ap, f)}"
+                   for f in ("bits", "group_size", "s")
+                   if getattr(bp, f) != getattr(ap, f)]
+            if bad:
+                raise ValueError(
+                    f"adapter {name!r} at {path!r} was trained under an "
+                    f"incompatible policy ({'; '.join(bad)})")
+            qt = lp.data.get("q")
+            base_qt = None
+            # compare against the base's quantized storage at this path
+            if qt is not None:
+                base_qt = _path_linear(self.base, path).data["q"]
+                if qt.qweight.shape != base_qt.qweight.shape:
+                    raise ValueError(
+                        f"adapter {name!r} at {path!r}: trained base "
+                        f"storage {qt.qweight.shape} != store base "
+                        f"{base_qt.qweight.shape}")
+            return lp
+
+        map_linears(trained_params, fn)
+
+    def evict(self, name: str):
+        """Drop a registered adapter; refuses live ones.  The bank row is
+        zeroed so any stale id gathers the null adapter."""
+        if name not in self._names:
+            raise KeyError(
+                f"unknown adapter {name!r}; registered: {sorted(self._names)}")
+        aid = self._names[name]
+        if aid in self._live:
+            raise RuntimeError(
+                f"adapter {name!r} (id {aid}) is live (queued or "
+                f"in-flight); drain its requests before evicting")
+        idx = (Ellipsis, aid, slice(None), slice(None))
+        for bank in self._banks.values():
+            bank.a = bank.a.at[idx].set(0)
+            bank.b = bank.b.at[idx].set(0)
+        del self._names[name]
+        del self._by_id[aid]
+        self._last_used.pop(aid, None)
+        self.version += 1
+
+    # ---------------- tree assembly ----------------
+
+    def with_slot_ids(self, slot_ids):
+        """Serving params tree for a slot->adapter mapping ``[B]``.
+
+        Banked linears become ``qalora_slot`` LinearParams holding the
+        shared base, both banks, and the ids broadcast across any
+        leading stack dims (scanned layers slice all data leaves on
+        axis 0, so ids must carry the stack's lead).  Bank/base arrays
+        are shared by reference — assembling a tree is a host-side walk,
+        not a copy."""
+        ids = jnp.asarray(slot_ids, jnp.int32).reshape(-1)
+
+        def fn(path, lp: LinearParams):
+            bank = self._banks.get(path)
+            if bank is None:
+                return lp
+            data = {"q": lp.data["q"], "a": bank.a, "b": bank.b,
+                    "ids": jnp.broadcast_to(ids, bank.lead + ids.shape)}
+            return LinearParams(
+                data=data, scheme="qalora_slot",
+                policy=dataclasses.replace(lp.policy, mode="qalora_slot"),
+                exempt=lp.exempt)
+
+        return map_linears(self.base, fn)
+
+    def merged(self, name: Optional[str] = None):
+        """Merged single-adapter INT-N tree (the per-request reference):
+        zeros update only, exactly :func:`repro.core.qalora.merge` per
+        banked path.  ``None`` returns the bare base (null adapter)."""
+        if name is None:
+            return self.base
+        if name not in self._names:
+            raise KeyError(
+                f"unknown adapter {name!r}; registered: {sorted(self._names)}")
+        aid = self._names[name]
+
+        def fn(path, lp: LinearParams):
+            bank = self._banks.get(path)
+            if bank is None:
+                return lp
+            ad = qalora_lib.QALoRAParams(a=bank.a[..., aid, :, :],
+                                         b=bank.b[..., aid, :, :])
+            qt = qalora_lib.merge(lp.data["q"], ad, bank.policy.s)
+            return LinearParams(data={"q": qt}, scheme="intq",
+                                policy=lp.policy, exempt=lp.exempt)
+
+        return map_linears(self.base, fn)
+
+
+def _path_linear(tree, path: str) -> LinearParams:
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node

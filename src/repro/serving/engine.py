@@ -93,8 +93,8 @@ def _slot_reset(slot_state, cache, mask):
     return slot_state.reset(cache, mask)
 
 
-def _encode_cross(lm, params, src):
-    return lm.encode_cross(params, src)
+def _encode_cross(lm, params, src, src_len):
+    return lm.encode_cross(params, src, src_len=src_len)
 
 
 # one shared compile cache across engine instances: `lm` (and its
@@ -179,7 +179,7 @@ class ContinuousEngine:
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  prefill_chunk: int = 8, decode_burst: int = 8,
                  cache_dtype=jnp.float32, max_src: int = 0,
-                 step_hook=None):
+                 step_hook=None, adapters=None):
         if not lm.supports_ragged():
             raise NotImplementedError(
                 f"continuous engine: family {lm.cfg.family!r} has no "
@@ -187,6 +187,25 @@ class ContinuousEngine:
                 f"use --engine static")
         self.lm, self.params = lm, params
         self.n_slots, self.max_len = n_slots, max_len
+        # multi-tenant serving: an AdapterStore supplies the params tree
+        # (shared INT-N base + per-slot adapter indices riding inside the
+        # pytree); `params` is then only the aux/encode base.  Remapping
+        # slots to adapters swaps array values under an unchanged pytree
+        # structure, so the compiled steps never retrace on a mix change.
+        self.adapters = adapters
+        self._adapter_key = None
+        if adapters is not None:
+            if lm.cfg.family == "encdec":
+                raise NotImplementedError(
+                    "adapter serving: the encdec encoder runs outside the "
+                    "slotted step (batch 1 per admission), so per-slot "
+                    "adapter indices do not apply; serve encdec merged")
+            if lm.absorbed_weights(params) is not None:
+                raise NotImplementedError(
+                    f"adapter serving: family {lm.cfg.family!r} hoists "
+                    f"absorbed weights out of the step from a FIXED params "
+                    f"tree, which would ignore per-slot adapters on those "
+                    f"projections; serve this family merged")
         self.prefill_chunk = prefill_chunk
         db = max(1, decode_burst)
         self.decode_burst = 1 << (db.bit_length() - 1)
@@ -213,16 +232,30 @@ class ContinuousEngine:
             self.n_slots, self.max_len, dtype=self.cache_dtype,
             src_cap=self.max_src or None)
         self.stats = EngineStats()
+        self._adapter_key = None
+        self._refresh_adapters()
 
     # ---------------- public API ----------------
 
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None,
-               rid: Optional[int] = None, src=None) -> int:
+               rid: Optional[int] = None, src=None,
+               adapter_id=None) -> int:
         """Queue a request; returns its rid (key into run()'s results).
         Pass ``rid`` to keep a caller-side id (e.g. a trace's pinned
         rid); omitted rids auto-assign past any pinned ones.  ``src``
-        (encdec only) carries the request's encoder frames [Ss, d]."""
+        (encdec only) carries the request's encoder frames [Ss, d].
+        ``adapter_id`` (name or id of a registered AdapterStore entry;
+        0/None = null adapter) binds the request to one adapter —
+        unknown ids fail loudly HERE, not mid-serve."""
+        aid = 0
+        if adapter_id not in (None, 0):
+            if self.adapters is None:
+                raise ValueError(
+                    f"request names adapter {adapter_id!r} but the engine "
+                    f"has no AdapterStore (pass adapters= at construction)")
+            aid = self.adapters.resolve(adapter_id)  # ValueError on unknown
+            self.adapters.touch(aid)
         if src is not None:
             if self.lm.cfg.family != "encdec":
                 raise ValueError(
@@ -239,7 +272,8 @@ class ContinuousEngine:
                     f"engine's cross cache holds max_src={self.max_src}")
         req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      rid=-1 if rid is None else rid, src=src)
+                      rid=-1 if rid is None else rid, src=src,
+                      adapter_id=aid)
         return self.sched.submit(req)
 
     def run(self) -> Dict[int, List[int]]:
@@ -248,6 +282,10 @@ class ContinuousEngine:
         t0 = time.time()
         while self.sched.has_work:
             self.step_once()
+        # republish the (now empty) live-id set: without this, the store
+        # would keep refusing to evict the last batch's adapters after
+        # the engine has fully drained
+        self._refresh_adapters()
         self.stats.seconds += time.time() - t0
         return self.sched.outputs
 
@@ -286,17 +324,41 @@ class ContinuousEngine:
             self.cache = _JIT_RESET(self.slot_state, self.cache,
                                     jnp.asarray(mask))
             self._pin_cross(filled)
+        self._refresh_adapters()
         if self.sched.all_decoding:
             self._run_burst()
         else:
             self._run_ragged()
 
+    def _refresh_adapters(self):
+        """Rebind ``self.params`` to the store's serving tree for the
+        CURRENT slot->adapter mapping.  The rebuild is a host-side tree
+        walk sharing every bank/base array by reference, and it only
+        runs when the mapping or the store's contents changed (the
+        version counter covers register/evict).  Also publishes the
+        live-id set so the store's LRU never evicts an adapter that a
+        queued or in-flight request still needs."""
+        if self.adapters is None:
+            return
+        self.adapters.set_live(self.sched.live_adapter_ids())
+        ids = self.sched.slot_adapter_ids()
+        key = (tuple(ids.tolist()), self.adapters.version)
+        if key != self._adapter_key:
+            self._adapter_key = key
+            self.params = self.adapters.with_slot_ids(ids)
+
     def _pin_cross(self, filled):
         """encdec admission: encode each refilled slot's ``src`` frames
         once and pin the per-layer cross K/V into the slot's frozen cross
-        cache (one compile per distinct src length — the encoder is
-        bidirectional, so frames cannot be zero-padded without changing
-        valid outputs).  Src-less requests keep the zeroed cross cache
+        cache.  Src lengths are BUCKETED: frames are zero-padded up to
+        the next power of two (capped at ``max_src``) and the true length
+        rides into the encoder as a traced ``src_len`` key mask, so at
+        most O(log max_src) encoder programs ever compile under live
+        traffic with arbitrary lengths — and, because masked keys hit
+        exp(NEG_INF) == 0 exactly, the pinned rows are bit-identical to
+        encoding the unpadded source.  Only the first ``ss`` rows (and
+        the true length) are pinned; padded rows' garbage K/V never
+        enters the cache.  Src-less requests keep the zeroed cross cache
         (cross len 0: a zero context, like the static token-only path)."""
         if self.lm.cfg.family != "encdec":
             return
@@ -306,13 +368,17 @@ class ContinuousEngine:
             if src is None:
                 continue
             ss = src.shape[0]
+            bs = min(self.max_src, 1 << max(ss - 1, 0).bit_length())
+            pad = np.zeros((bs, src.shape[1]), np.float32)
+            pad[:ss] = src
             ks, vs = _JIT_ENCODE(self.lm, self.params,
-                                 jnp.asarray(src)[None])
+                                 jnp.asarray(pad)[None],
+                                 jnp.asarray([ss], jnp.int32))
             cross = {
                 "k": cross["k"].at[:, i, :ss].set(
-                    ks[:, 0].astype(cross["k"].dtype)),
+                    ks[:, 0, :ss].astype(cross["k"].dtype)),
                 "v": cross["v"].at[:, i, :ss].set(
-                    vs[:, 0].astype(cross["v"].dtype)),
+                    vs[:, 0, :ss].astype(cross["v"].dtype)),
                 "len": cross["len"].at[i].set(ss),
             }
         self.cache["layers"]["cross"] = cross

@@ -99,6 +99,7 @@ class Ticket:
     max_new_tokens: int
     eos_id: Optional[int] = None
     src: Optional[np.ndarray] = None
+    adapter_id: int = 0                      # resolved AdapterStore id
     deadline_s: Optional[float] = None       # total: submit -> last token
     ttft_deadline_s: Optional[float] = None  # submit -> first token
     seq: int = -1                            # arrival order (FIFO recovery)
@@ -143,12 +144,12 @@ class ServingFrontend:
                  default_ttft_deadline_s: Optional[float] = None,
                  injector: Optional[Callable] = None,
                  guard=None, clock: Callable[[], float] = time.monotonic,
-                 cache_dtype=None, max_src: int = 0):
+                 cache_dtype=None, max_src: int = 0, adapters=None):
         kw = {} if cache_dtype is None else {"cache_dtype": cache_dtype}
         self.engine = ContinuousEngine(
             lm, params, n_slots=n_slots, max_len=max_len,
             prefill_chunk=prefill_chunk, decode_burst=decode_burst,
-            max_src=max_src, step_hook=injector, **kw)
+            max_src=max_src, step_hook=injector, adapters=adapters, **kw)
         self.queue_cap = queue_cap
         self.max_recoveries = max_recoveries
         self.default_deadline_s = default_deadline_s
@@ -180,14 +181,18 @@ class ServingFrontend:
     def submit(self, prompt, max_new_tokens: int, *,
                eos_id: Optional[int] = None, rid: Optional[int] = None,
                src=None, deadline_s: Optional[float] = None,
-               ttft_deadline_s: Optional[float] = None) -> Ticket:
+               ttft_deadline_s: Optional[float] = None,
+               adapter_id=None) -> Ticket:
         """Queue a request; returns its :class:`Ticket` immediately.
 
         Never raises for load or request-shape problems — the ticket
         comes back ``REJECTED`` with the reason (queue depth for
-        overload) in ``.error``, so callers and the SLO harness see one
-        uniform status channel.  Only API misuse (a duplicate pinned
-        ``rid``) raises."""
+        overload, an UNKNOWN ``adapter_id``, ...) in ``.error``, so
+        callers and the SLO harness see one uniform status channel.
+        ``adapter_id`` (AdapterStore name or id; 0/None = the bare base)
+        is resolved HERE, at submit time, so a later rename/re-register
+        cannot silently rebind an accepted request.  Only API misuse (a
+        duplicate pinned ``rid``) raises."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         now = self._clock()
         with self._lock:
@@ -206,7 +211,7 @@ class ServingFrontend:
                        t_submit=now)
             self._seq += 1
             self.tickets[rid] = t
-            err = self._admission_error(t)
+            err = self._admission_error(t, adapter_id)
             if err:
                 self._finish(t, RequestStatus.REJECTED, error=err, now=now)
             else:
@@ -214,8 +219,10 @@ class ServingFrontend:
         self._work_evt.set()
         return t
 
-    def _admission_error(self, t: Ticket) -> str:
-        """Reject reason for a fresh ticket, or '' (lock held)."""
+    def _admission_error(self, t: Ticket, adapter_id=None) -> str:
+        """Reject reason for a fresh ticket, or '' (lock held).  On
+        success the ticket's ``adapter_id`` holds the RESOLVED store
+        id."""
         if self.fatal is not None:
             return f"frontend failed: {self.fatal!r}"
         if self._draining:
@@ -224,6 +231,16 @@ class ServingFrontend:
         if depth >= self.queue_cap:
             return (f"backpressure: queue full at depth {depth}/"
                     f"{self.queue_cap} (retry later or raise --queue-cap)")
+        if adapter_id not in (None, 0):
+            store = self.engine.adapters
+            if store is None:
+                return (f"request names adapter {adapter_id!r} but the "
+                        f"engine has no AdapterStore")
+            try:
+                t.adapter_id = store.resolve(adapter_id)
+                store.touch(t.adapter_id)
+            except ValueError as e:
+                return str(e)
         if len(t.prompt) < 1:
             return "empty prompt: feed BOS explicitly"
         if t.max_new_tokens < 1:
@@ -446,8 +463,11 @@ class ServingFrontend:
                 continue
             try:
                 self.engine.submit(t.prompt, t.max_new_tokens,
-                                   eos_id=t.eos_id, rid=t.rid, src=t.src)
-            except ValueError as e:  # engine-side validation (e.g. src)
+                                   eos_id=t.eos_id, rid=t.rid, src=t.src,
+                                   adapter_id=t.adapter_id)
+            except ValueError as e:
+                # engine-side validation (src shape, or an adapter
+                # evicted between frontend submit and engine admission)
                 self._finish(t, RequestStatus.REJECTED, error=str(e))
 
     def _harvest(self, now: float):
@@ -515,11 +535,13 @@ class ServingFrontend:
                 prompt = np.concatenate(
                     [t.prompt, np.asarray(t.tokens, np.int32)])
                 self.engine.submit(prompt, remaining, eos_id=t.eos_id,
-                                   rid=t.rid, src=t.src)
+                                   rid=t.rid, src=t.src,
+                                   adapter_id=t.adapter_id)
             for r in queued:
                 t = self.tickets[r.rid]
                 self.engine.submit(r.prompt, r.max_new_tokens,
-                                   eos_id=r.eos_id, rid=r.rid, src=r.src)
+                                   eos_id=r.eos_id, rid=r.rid, src=r.src,
+                                   adapter_id=r.adapter_id)
 
 
 def _zero_stats():

@@ -31,13 +31,20 @@ class Request:
     ``src`` (encdec only) carries the request's encoder frames [Ss, d];
     at admission the engine encodes them once and pins the resulting
     cross K/V into the slot's frozen cross cache.  ``None`` serves with
-    an empty (all-masked, zero-context) cross cache."""
+    an empty (all-masked, zero-context) cross cache.
+
+    ``adapter_id`` selects a bank row of the engine's
+    :class:`~repro.serving.adapters.AdapterStore` (multi-tenant
+    serving); 0 is the reserved null adapter (the bare base model).
+    Validation/resolution happens at submit time in the engine —
+    the scheduler just carries the resolved id."""
 
     prompt: np.ndarray            # [P] int32, P >= 1
     max_new_tokens: int
     eos_id: Optional[int] = None
     rid: int = -1                 # assigned by Scheduler.submit
     src: Optional[np.ndarray] = None  # [Ss, d] encoder frames (encdec)
+    adapter_id: int = 0           # AdapterStore bank row (0 = null)
 
 
 @dataclasses.dataclass
@@ -148,6 +155,25 @@ class Scheduler:
     @property
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    def slot_adapter_ids(self) -> np.ndarray:
+        """Per-slot adapter index vector ``[n_slots] int32`` (free slots
+        map to the null adapter 0 — their rows are masked anyway, and
+        eviction/refill therefore RESETS the slot's index by
+        construction)."""
+        ids = np.zeros((self.n_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                ids[i] = s.req.adapter_id
+        return ids
+
+    def live_adapter_ids(self) -> set:
+        """Adapter ids referenced by any queued or in-flight request
+        (the store's eviction guard)."""
+        ids = {s.req.adapter_id for s in self.slots if s is not None}
+        ids.update(r.adapter_id for r in self.queue)
+        ids.discard(0)
+        return ids
 
     @property
     def all_decoding(self) -> bool:

@@ -26,18 +26,38 @@ from .scheduler import Request
 def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
                prompt_lens: Sequence[int] = (3, 5, 8),
                gen_lens: Sequence[int] = (2, 4, 12),
-               eos_id: Optional[int] = None) -> List[Request]:
+               eos_id: Optional[int] = None,
+               adapter_ids: Optional[Sequence] = None,
+               store=None) -> List[Request]:
     """Random-token requests cycling through the given length mixes.
 
     Lengths are drawn round-robin (not sampled) so a trace is exactly
     reproducible and every length appears; token ids avoid 0..3 like the
-    serve demo (reserved-ish ids)."""
+    serve demo (reserved-ish ids).
+
+    ``adapter_ids`` (multi-tenant traffic) cycles round-robin like the
+    lengths: entry ``i % len`` binds request ``i`` to that
+    :class:`~repro.serving.adapters.AdapterStore` adapter (name, id, or
+    0/None for the bare base).  Pass ``store`` to resolve names and
+    validate every id against the registered set up front — a typo'd
+    tenant fails HERE, not as a mid-replay engine error."""
     if vocab <= 4:
         # ids are drawn from [4, vocab): a tiny smoke vocab would make
         # numpy raise a cryptic "low >= high" (or sample an empty range)
         raise ValueError(
             f"make_trace needs vocab > 4 (token ids are drawn from "
             f"[4, vocab), skipping reserved-ish ids 0..3); got {vocab}")
+    aids = [0] * n_requests
+    if adapter_ids is not None:
+        if len(adapter_ids) < 1:
+            raise ValueError("adapter_ids must be a non-empty sequence")
+        cycle = [a if a is not None else 0 for a in adapter_ids]
+        if store is not None:
+            cycle = [store.resolve(a) for a in cycle]  # loud on unknown
+        elif any(isinstance(a, str) for a in cycle):
+            raise ValueError(
+                "adapter_ids contains names; pass store= to resolve them")
+        aids = [int(cycle[i % len(cycle)]) for i in range(n_requests)]
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
@@ -45,7 +65,7 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
         g = int(gen_lens[i % len(gen_lens)])
         prompt = rng.integers(4, vocab, size=(p,)).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=g, eos_id=eos_id,
-                            rid=i))
+                            rid=i, adapter_id=aids[i]))
     return reqs
 
 

@@ -147,3 +147,59 @@ def test_src_rejected_for_non_encdec_family():
     with pytest.raises(ValueError, match="encdec"):
         eng.submit(np.arange(4, 6, dtype=np.int32), 2,
                    src=np.zeros((2, cfg.d_model), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# src-length bucketing (compile-count pin)
+# ---------------------------------------------------------------------------
+
+
+def test_encode_compiles_are_bucketed_to_pow2_lengths(served_encdec,
+                                                      monkeypatch):
+    """Live traffic carries arbitrary src lengths; without bucketing,
+    each distinct length would compile its own encoder program.  Pin the
+    contract: every `_JIT_ENCODE` call sees a src padded to a power-of-
+    two bucket, so 7 distinct request lengths dispatch at most
+    O(log max_src) distinct encoder shapes — and the true length rides
+    in as a traced mask, not a compile key."""
+    import repro.serving.engine as engine_mod
+    cfg, lm, merged = served_encdec
+    seen = []
+    real = engine_mod._JIT_ENCODE
+
+    def spy(lm_, params, src, src_len):
+        seen.append((int(src.shape[1]), int(np.asarray(src_len)[0])))
+        return real(lm_, params, src, src_len)
+
+    monkeypatch.setattr(engine_mod, "_JIT_ENCODE", spy)
+    eng = ContinuousEngine(lm, merged, n_slots=2, max_len=12,
+                           prefill_chunk=4, decode_burst=2, max_src=MAX_SRC)
+    for ss in range(1, MAX_SRC):  # 7 distinct true lengths
+        eng.submit(np.arange(4, 7, dtype=np.int32), 2, rid=ss,
+                   src=_src(cfg, ss, 40 + ss))
+    out = eng.run()
+    assert len(out) == MAX_SRC - 1 and len(seen) == MAX_SRC - 1
+    for padded, true in seen:
+        assert padded & (padded - 1) == 0, f"non-pow2 bucket {padded}"
+        assert true <= padded <= MAX_SRC
+    buckets = {padded for padded, _ in seen}
+    assert len(buckets) <= MAX_SRC.bit_length(), buckets  # O(log max_src)
+
+
+@pytest.mark.slow
+def test_bucketed_encode_is_bit_identical_to_unpadded(served_encdec):
+    """Masked keys hit exp(NEG_INF) == 0 exactly, so the pinned cross
+    K/V from a padded+masked encode must be BIT-identical to encoding
+    the unpadded source — bucketing is a pure compile-count
+    optimization, never a numerics change."""
+    cfg, lm, merged = served_encdec
+    for ss in (3, 5, 7):  # none on a bucket boundary
+        src = _src(cfg, ss, 70 + ss)
+        ks, vs = jax.jit(lm.encode_cross)(merged, jnp.asarray(src)[None])
+        bs = 1 << (ss - 1).bit_length()
+        pad = np.zeros((bs, cfg.d_model), np.float32)
+        pad[:ss] = src
+        ks2, vs2 = jax.jit(lm.encode_cross)(
+            merged, jnp.asarray(pad)[None], jnp.asarray([ss], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(ks), np.asarray(ks2[:, :, :ss]))
+        np.testing.assert_array_equal(np.asarray(vs), np.asarray(vs2[:, :, :ss]))
