@@ -13,6 +13,9 @@
   engine  serving-engine bench: continuous batching (slot eviction +
           refill) vs static batching on a mixed-length request trace
           (useful tok/s, slot occupancy)
+  paged   paged KV cache vs contiguous slots on a shared-prefix trace
+          (tok/s, prefill rows skipped via prefix reuse, peak cache
+          bytes) — token streams asserted identical first
   slo     latency-SLO harness: live Poisson/bursty arrivals replayed
           against the async ServingFrontend (threaded intake, bounded
           queue, deadlines), clean AND fault-injected — TTFT/TPOT
@@ -508,6 +511,106 @@ def engine_bench():
         note="; zamba2 reduced, hybrid mamba + shared-attn slot state")
 
 
+def paged_bench():
+    """Paged KV cache vs contiguous per-slot slabs on a shared-system-
+    prompt trace (every request carries the same 16-token prefix — the
+    workload hash-based prefix reuse targets).  Rows: useful tok/s for
+    both layouts (token streams asserted identical first), prefill
+    model-rows actually consumed (prefix hits skip whole chunks), and
+    peak cache bytes — the contiguous engine reserves slots x max_len
+    up front, the paged engine's high-water mark is ``peak_used`` pages
+    of the pool, with shared prefix pages counted once."""
+    import repro.configs as C
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.serve import merge_model
+    from repro.models.lm import LM
+    from repro.models.slot_state import CACHE
+    from repro.serving import ContinuousEngine, make_trace
+
+    # same notch-above-smoke geometry as the gqa engine row
+    cfg = C.reduced("gemma3-1b", d_model=128, n_layers=4, d_ff=256,
+                    n_heads=8, n_kv_heads=2)
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+
+    slots, page_size, shared = 4, 8, 16       # prefix = 2 full pages
+    trace = make_trace(12, cfg.vocab, seed=0, shared_prefix=shared,
+                       prompt_lens=(4,), gen_lens=(32, 16, 24))
+    max_len = shared + 4 + 32
+
+    def cache_bytes(eng):
+        """Total bytes of the engine's CACHE-kind leaves (the KV that
+        paging pools); STATE/LEN leaves are identical across layouts."""
+        spec = eng.slot_state.layout(slots, eng.max_len)
+        tot = [0]
+
+        def one(s, x):
+            if s.kind == CACHE:
+                tot[0] += x.nbytes
+            return 0
+
+        jax.tree.map(one, spec, eng.cache)
+        return tot[0]
+
+    mesh = make_cpu_mesh()
+    with mesh:
+        def build(**kw):
+            return ContinuousEngine(lm, merged, n_slots=slots,
+                                    max_len=max_len, prefill_chunk=page_size,
+                                    decode_burst=16, **kw)
+
+        cont, paged = build(), build(page_size=page_size)
+
+        def run(eng):
+            # first request alone until it finishes prefill: its prefix
+            # pages register, so the following wave admits against a WARM
+            # prefix cache (the steady state a shared system prompt
+            # serves in); the contiguous engine runs the same schedule
+            # for a fair clock
+            eng.reset()
+            r0 = trace[0]
+            eng.submit(r0.prompt, r0.max_new_tokens, r0.eos_id, rid=r0.rid)
+            while eng.sched.slots[0] is None or eng.sched.slots[0].prefilling:
+                eng.step_once()
+            for r in trace[1:]:
+                eng.submit(r.prompt, r.max_new_tokens, r.eos_id, rid=r.rid)
+            return eng.run(), eng.stats
+
+        (out_c, _), (out_p, _) = run(cont), run(paged)  # warm (compile)
+        assert out_c == out_p, "paged engine diverged from contiguous"
+        st_c = min((run(cont)[1] for _ in range(3)), key=lambda s: s.seconds)
+        st_p = min((run(paged)[1] for _ in range(3)), key=lambda s: s.seconds)
+
+    pt = paged.page_table                      # the timed run's pool
+    assert pt.reused_tokens_total > 0, "no prefix hits on a shared trace"
+    assert st_p.busy_slot_steps < st_c.busy_slot_steps, \
+        "prefix reuse did not cut prefill model-rows"
+    useful = sum(r.max_new_tokens for r in trace)
+    emit("paged", "contiguous-tok_s", round(st_c.tok_per_s, 1),
+         f"{useful} useful tokens, occupancy {st_c.occupancy:.0%}, "
+         f"{st_c.busy_slot_steps} busy model-rows")
+    emit("paged", "paged-tok_s", round(st_p.tok_per_s, 1),
+         f"same trace, identical tokens (asserted); occupancy "
+         f"{st_p.occupancy:.0%}, {st_p.busy_slot_steps} busy model-rows "
+         f"({st_c.busy_slot_steps - st_p.busy_slot_steps} prefill rows "
+         f"skipped via prefix hits)")
+    emit("paged", "reused-prefill-tokens", pt.reused_tokens_total,
+         f"prompt tokens served from shared pages across "
+         f"{len(trace)} requests ({shared}-token shared prefix, "
+         f"page_size {page_size}); {pt.alloc_backoffs} admission backoffs")
+    contig_b = cache_bytes(cont)
+    page_b = cache_bytes(paged) / paged.n_pages
+    peak_b = int(pt.peak_used * page_b)
+    assert peak_b < contig_b, "paged peak should undercut the static slabs"
+    emit("paged", "contiguous-cache-bytes", contig_b,
+         f"slots x max_len reserved up front "
+         f"({slots} x {max_len} tokens of KV)")
+    emit("paged", "paged-peak-cache-bytes", peak_b,
+         f"{pt.peak_used}/{paged.n_pages - 1} pages at the high-water "
+         f"mark ({peak_b / contig_b:.0%} of contiguous; shared prefix "
+         f"pages counted once)")
+
+
 def adapters_bench():
     """Multi-tenant adapter serving: a mixed-adapter trace (two tenants
     + null-adapter requests, different adapter per slot in the SAME
@@ -718,6 +821,7 @@ TABLES = {
     "kernels": kernels_bench,
     "decode": decode_bench,
     "engine": engine_bench,
+    "paged": paged_bench,
     "adapters": adapters_bench,
     "slo": slo_bench,
     "roofline": roofline_summary,

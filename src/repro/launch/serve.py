@@ -186,6 +186,17 @@ def main(argv=None):
     ap.add_argument("--decode-burst", type=int, default=8,
                     help="continuous engine fused decode steps per dispatch "
                          "(clamped down to a power of two)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="continuous/frontend: page the KV cache into "
+                         "blocks of this many tokens (0 = contiguous "
+                         "per-slot slabs).  Pages are pooled across slots "
+                         "with hash-based prefix reuse; token streams are "
+                         "identical to the contiguous layout")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="paged KV pool size incl. the reserved null page "
+                         "(0 = match contiguous capacity: slots x "
+                         "ceil(max_len/page_size) + 1; smaller "
+                         "oversubscribes — admission backs off when dry)")
     ap.add_argument("--queue-cap", type=int, default=64,
                     help="frontend admission bound: submits past this "
                          "many waiting requests are REJECTED with the "
@@ -298,6 +309,11 @@ def main(argv=None):
     # doesn't have; its decode loop (zero cross-memory, as before) still
     # works, so route it through the reference loop.
     use_loop = args.loop or cfg.family == "encdec"
+    if args.page_size and args.engine not in ("continuous", "frontend"):
+        ap.error("--page-size needs --engine continuous|frontend (the "
+                 "static path has no slot scheduler to drive a page pool)")
+    paging = dict(page_size=max(args.page_size, 0),
+                  n_pages=args.n_pages or None)
     mesh = make_cpu_mesh()
     with mesh:
         if args.engine == "frontend":
@@ -326,7 +342,12 @@ def main(argv=None):
                         queue_cap=args.queue_cap,
                         default_deadline_s=ms(args.deadline_ms),
                         default_ttft_deadline_s=ms(args.ttft_deadline_ms),
-                        injector=injector, guard=guard, adapters=store)
+                        injector=injector, guard=guard, adapters=store,
+                        **paging)
+                except ValueError as e:
+                    if args.page_size:
+                        ap.error(f"--page-size: {e}")
+                    raise
                 except NotImplementedError as e:
                     if store is not None:
                         ap.error(f"--adapters with --engine frontend: {e}")
@@ -375,7 +396,12 @@ def main(argv=None):
                                        max_len=max_len,
                                        prefill_chunk=args.prefill_chunk,
                                        decode_burst=args.decode_burst,
-                                       adapters=store)
+                                       adapters=store, **paging)
+            except ValueError as e:
+                # e.g. rwkv (no CACHE leaves to page) or a degenerate pool
+                if args.page_size:
+                    ap.error(f"--page-size: {e}")
+                raise
             except NotImplementedError as e:
                 if store is not None:
                     ap.error(f"--adapters with --engine continuous: {e}")
@@ -394,6 +420,12 @@ def main(argv=None):
             gen = np.asarray([outputs[r] for r in rids], dtype=np.int32)
             mix = (f", {store.n_adapters}+null tenants per-slot"
                    if store is not None else "")
+            if eng.page_table is not None:
+                pt = eng.page_table
+                mix += (f", paged {pt.page_size}-token pages: "
+                        f"{pt.peak_used}/{pt.capacity} peak, "
+                        f"{pt.reused_tokens_total} prefix tokens reused, "
+                        f"{pt.alloc_backoffs} backoffs")
             dt, path = st.seconds, (f"continuous, {slots} slots, "
                                     f"occupancy {st.occupancy:.0%}, "
                                     f"{st.dispatches} dispatches{mix}")

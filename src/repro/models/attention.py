@@ -266,20 +266,76 @@ def _insert_tokens(cache, new, cur_len, n_new):
     return jnp.where(hit, ins, cache)
 
 
+def paged_view(pool, pages):
+    """Gather a slot-contiguous view of a paged cache pool.
+
+    pool: [n_pages, ps, ...]; pages: [B, P] int32 page indices (entry k of
+    slot b maps logical positions [k*ps, (k+1)*ps) — unmapped entries point
+    at the null page 0).  Returns [B, P*ps, ...], drop-in for the slotted
+    [B, S, ...] cache the attention cores expect.  Null-page rows surface
+    at positions past the slot's allocation, which qpos masking already
+    excludes, so results never depend on null-page content.
+    """
+    b, p = pages.shape
+    ps = pool.shape[1]
+    return pool[pages].reshape((b, p * ps) + pool.shape[2:])
+
+
+def _insert_tokens_paged(pool, new, cur_len, n_new, pages):
+    """Paged counterpart of :func:`_insert_tokens`: scatter new[b, i] into
+    the pool page holding logical position cur_len[b] + i (i < n_new[b]).
+    pool: [n_pages, ps, ...]; new: [B, C, ...]; pages: [B, P].  Rows
+    i >= n_new[b] are dumped into the null page (page 0, position 0) —
+    never read, exactly as contiguous masked inserts drop them.  Live
+    slots hold disjoint page sets past their (read-only) shared prefix,
+    so flat scatter indices never collide across slots."""
+    n_pages, ps = pool.shape[0], pool.shape[1]
+    b, c = new.shape[0], new.shape[1]
+    pos = cur_len[:, None] + jnp.arange(c)[None, :]           # [B, C]
+    valid = jnp.arange(c)[None, :] < n_new[:, None]
+    pidx = jnp.take_along_axis(
+        pages, jnp.clip(pos // ps, 0, pages.shape[1] - 1), axis=1)
+    dest = jnp.where(valid, pidx * ps + pos % ps, 0)          # [B, C]
+    flat = pool.reshape((n_pages * ps,) + pool.shape[2:])
+    flat = flat.at[dest.reshape(-1)].set(
+        new.reshape((b * c,) + new.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def _cache_insert(cache_leaf, new, cur_len, n_new, pages):
+    """Insert dispatch: contiguous slotted leaf when pages is None, paged
+    pool otherwise."""
+    if pages is None:
+        return _insert_tokens(cache_leaf, new, cur_len, n_new)
+    return _insert_tokens_paged(cache_leaf, new, cur_len, n_new, pages)
+
+
+def _cache_view(cache_leaf, pages):
+    """Read dispatch: the leaf itself when contiguous, gathered view when
+    paged."""
+    return cache_leaf if pages is None else paged_view(cache_leaf, pages)
+
+
 def gqa_prefill_chunk(p, x, cache, cur_len, n_new, cfg: AttnConfig,
-                      pol: QuantPolicy, window=None, theta=None):
+                      pol: QuantPolicy, window=None, theta=None, pages=None):
     """Ragged chunk step: x [B,C,d]; slot b consumes rows [:n_new[b]] at
     positions cur_len[b].. (per-slot rotary offsets), inserts their K/V
     into the slotted cache, and attends causally against it.  C == 1 with
     n_new in {0,1} is masked decode; larger C is chunked prefill.  Rows
-    i >= n_new[b] compute garbage but never touch the cache."""
+    i >= n_new[b] compute garbage but never touch the cache.
+
+    ``pages`` ([B, P] int32, optional) switches the cache leaves from
+    per-slot [B, S, ...] to paged pools [n_pages, ps, ...] — inserts
+    scatter through the page map and attention runs on the gathered
+    per-slot view.  Identical math either way."""
     b, c, _ = x.shape
     positions = cur_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
     q, k, v = _qkv(p, x, cfg, pol, positions, theta)
-    kc = _insert_tokens(cache["k"], k, cur_len, n_new)
-    vc = _insert_tokens(cache["v"], v, cur_len, n_new)
+    kc = _cache_insert(cache["k"], k, cur_len, n_new, pages)
+    vc = _cache_insert(cache["v"], v, cur_len, n_new, pages)
     window = cfg.window if window is None else window
-    o = chunk_attention(q, kc, vc, positions, window=window)
+    o = chunk_attention(q, _cache_view(kc, pages), _cache_view(vc, pages),
+                        positions, window=window)
     out = linear_apply(p["wo"], o.reshape(b, c, -1), pol)
     return out, {"k": kc, "v": vc}
 
@@ -450,7 +506,7 @@ def mla_chunk_attention(q_c, q_rope, c_cache, kr_cache, qpos, *, scale):
 
 
 def mla_prefill_chunk(p, x, cache, cur_len, n_new, cfg: MLAConfig,
-                      pol: QuantPolicy, w_kv=None):
+                      pol: QuantPolicy, w_kv=None, pages=None):
     """Ragged chunk step through MLA: x [B,C,d]; slot b consumes rows
     [:n_new[b]] at positions cur_len[b].. (per-slot rotary offsets),
     inserts their compressed latent / rope key into the slotted cache,
@@ -462,20 +518,25 @@ def mla_prefill_chunk(p, x, cache, cur_len, n_new, cfg: MLAConfig,
     pair ([rank,H,nope], [rank,H,vdim]) so the absorbed-weight dequant
     runs OUTSIDE the per-step graph (the serving engine computes it once
     per run); when None it is derived here via :func:`_kv_up_split`.
+
+    ``pages`` ([B, P] int32, optional) switches the compressed cache from
+    per-slot [B, S, ...] leaves to paged pools [n_pages, ps, ...] — see
+    :func:`gqa_prefill_chunk`.
     """
     b, c, _ = x.shape
     positions = cur_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
     q_nope, q_rope = _mla_q(p, x, cfg, pol, positions)     # [B,C,H,*]
     c_new, kr_new = _mla_ckv(p, x, cfg, pol, positions)
-    cc = _insert_tokens(cache["c"], c_new, cur_len, n_new)
-    krc = _insert_tokens(cache["kr"], kr_new, cur_len, n_new)
+    cc = _cache_insert(cache["c"], c_new, cur_len, n_new, pages)
+    krc = _cache_insert(cache["kr"], kr_new, cur_len, n_new, pages)
 
     # absorb kv_up's K-half into q  (W_uk: rank -> H*nope)
     w_uk, w_uv = w_kv if w_kv is not None else _kv_up_split(p, cfg, x.dtype)
     q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
                      w_uk.astype(jnp.float32))             # [B,C,H,rank]
     ctx_c = mla_chunk_attention(
-        q_c, q_rope, cc, krc, positions,
+        q_c, q_rope, _cache_view(cc, pages), _cache_view(krc, pages),
+        positions,
         scale=1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim))
     o = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv.astype(jnp.float32))
     out = linear_apply(p["wo"], o.reshape(b, c, -1).astype(x.dtype), pol)

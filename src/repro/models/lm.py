@@ -88,11 +88,12 @@ def _gqa_block(p, x, cfg: ArchConfig, pol, *, window=None, theta=None,
 
 
 def _gqa_block_chunk(p, x, cache, cur_len, n_new, cfg: ArchConfig, pol, *,
-                     window=None, theta=None, moe=False):
-    """Ragged chunk through one block: x [B,C,d], per-slot n_new consumed."""
+                     window=None, theta=None, moe=False, pages=None):
+    """Ragged chunk through one block: x [B,C,d], per-slot n_new consumed.
+    ``pages`` ([B,P] int32) switches the KV leaves to paged pools."""
     a, cache = gqa_prefill_chunk(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
                                  cache, cur_len, n_new, _attn_cfg(cfg), pol,
-                                 window=window, theta=theta)
+                                 window=window, theta=theta, pages=pages)
     x = x + a
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if moe:
@@ -151,13 +152,14 @@ def _mla_block_prefill(p, x, cfg, pol, moe=False):
 
 
 def _mla_block_chunk(p, x, cache, cur_len, n_new, cfg, pol, *, moe=False,
-                     w_kv=None):
+                     w_kv=None, pages=None):
     """Ragged chunk through one MLA block: x [B,C,d], per-slot n_new
     consumed.  ``w_kv`` optionally carries this layer's precomputed
-    absorbed (W_uk, W_uv) so no dequant runs in the step graph."""
+    absorbed (W_uk, W_uv) so no dequant runs in the step graph; ``pages``
+    ([B,P] int32) switches the compressed cache to paged pools."""
     a, cache = mla_prefill_chunk(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
                                  cache, cur_len, n_new, _mla_cfg(cfg), pol,
-                                 w_kv=w_kv)
+                                 w_kv=w_kv, pages=pages)
     x = x + a
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if moe:
@@ -590,10 +592,12 @@ class LM:
         length = jnp.full((h.shape[0],), seq, jnp.int32)
         return logits, {"layers": cache, "len": length}
 
-    def slot_state(self) -> SlotState:
+    def slot_state(self, page_size: int = 0, n_pages: int = 0) -> SlotState:
         """The per-slot decode-state layout/lifecycle for this config
-        (init / snapshot / reset / advance; see models/slot_state.py)."""
-        return SlotState(self.cfg)
+        (init / snapshot / reset / advance; see models/slot_state.py).
+        ``page_size > 0`` selects the paged-pool CACHE layout (``n_pages``
+        shared pages; page 0 reserved null)."""
+        return SlotState(self.cfg, page_size=page_size, n_pages=n_pages)
 
     def supports_ragged(self) -> bool:
         """True when :meth:`step_ragged` covers ``cfg.family`` — the
@@ -677,6 +681,9 @@ class LM:
                 f"(LM.supports_ragged() is False)")
         cur = cache["len"]
         n_new = n_new.astype(jnp.int32)
+        # paged CACHE layout: the per-slot page map rides in the pytree as
+        # values, so remaps never retrace this program
+        pages = cache.get("pages")
         x = self._embed(params, tokens)
 
         if fam == "mla_moe":
@@ -684,7 +691,8 @@ class LM:
                 def body(xc, xs):
                     blk, cc, w_kv = xs
                     y, cc = _mla_block_chunk(blk, xc, cc, cur, n_new, cfg,
-                                             pol, moe=moe, w_kv=w_kv)
+                                             pol, moe=moe, w_kv=w_kv,
+                                             pages=pages)
                     return y, cc
                 return body
             wkv_d = aux["dense"] if aux is not None else None
@@ -711,7 +719,7 @@ class LM:
                 xc, gst = cscan(mamba_body, xc, (gblk, gst),
                                 name="mamba_inner")
                 y, kvc = _gqa_block_chunk(shared, xc, kvc, cur, n_new,
-                                          cfg, pol)
+                                          cfg, pol, pages=pages)
                 return y, (gst, kvc)
 
             x, (gstates, kvs) = cscan(
@@ -753,7 +761,7 @@ class LM:
                 blk, selfc, ck, cv = xs
                 a, selfc = gqa_prefill_chunk(
                     blk["attn"], rmsnorm(blk["ln1"], xc), selfc, cur,
-                    n_new, acfg, pol)
+                    n_new, acfg, pol, pages=pages)
                 xc = xc + a
                 xc = xc + cross_chunk(blk["cross"],
                                       rmsnorm(blk["ln2"], xc), ck, cv,
@@ -773,7 +781,8 @@ class LM:
             def body(xc, xs):
                 blk, kvc, w_, t_ = xs
                 y, kvc = _gqa_block_chunk(blk, xc, kvc, cur, n_new, cfg, pol,
-                                          window=w_, theta=t_, moe=moe)
+                                          window=w_, theta=t_, moe=moe,
+                                          pages=pages)
                 return y, kvc
 
             x, layers = cscan(body, x, (params["blocks"], cache["layers"],

@@ -25,6 +25,19 @@ decode cache is one of three kinds:
     Per-slot valid-length counters (the top-level ``len``, and the encdec
     cross ``len``): reset to 0 on eviction.
 
+Paged mode (``page_size > 0``): every CACHE leaf trades its per-slot
+``(..., B, S, ...)`` storage for a shared pool ``(..., n_pages,
+page_size, ...)`` — the slot and sequence axes become the page and
+in-page axes — and the cache pytree gains a top-level ``pages`` leaf
+``[B, slot_pages] int32`` mapping each slot's logical pages to pool
+pages (entry 0 = the reserved null page; see
+``repro.serving.paging.PageTable``).  STATE and LEN leaves are
+untouched: recurrent snapshot state has no sequence axis to page.
+``pages`` is itself a STATE leaf, so eviction nulls the slot's page row
+and the engine writes the next occupant's row as a plain value update —
+layouts (and therefore compiled step programs) never depend on the page
+map's contents.
+
 Lifecycle:
 
     ss = lm.slot_state()
@@ -113,9 +126,30 @@ class SlotState:
     """Family-agnostic per-slot decode-state lifecycle for one ArchConfig.
 
     Hashable (frozen dataclass over the frozen ArchConfig) so jitted
-    engine helpers can take it as a static argument."""
+    engine helpers can take it as a static argument.
+
+    ``page_size > 0`` switches every CACHE leaf to paged-pool storage
+    (``n_pages`` pages of ``page_size`` tokens shared across slots; page
+    0 reserved null) — see the module docstring."""
 
     cfg: ArchConfig
+    page_size: int = 0
+    n_pages: int = 0
+
+    def __post_init__(self):
+        if self.page_size > 0:
+            if self.cfg.family == "rwkv":
+                raise ValueError(
+                    "rwkv carries no length-indexed CACHE leaves — there is "
+                    "nothing to page; serve it with page_size=0")
+            if self.n_pages < 2:
+                raise ValueError(
+                    f"paged mode needs n_pages >= 2 (page 0 is the reserved "
+                    f"null page); got {self.n_pages}")
+
+    def slot_pages(self, max_len: int) -> int:
+        """Page-row width per slot: pages covering ``max_len`` tokens."""
+        return -(-max_len // self.page_size)
 
     # ---------------- layout ----------------
 
@@ -182,15 +216,42 @@ class SlotState:
                                 "len": SlotLeaf((B,), 0, LEN, jnp.int32)}}
         else:
             raise ValueError(fam)
-        return {"layers": layers,
-                "len": SlotLeaf((B,), 0, LEN, jnp.int32)}
+        out = {"layers": layers,
+               "len": SlotLeaf((B,), 0, LEN, jnp.int32)}
+        if self.page_size > 0:
+            out["layers"] = jax.tree.map(self._page_leaf, out["layers"])
+            # the page map is STATE: eviction nulls the row, admission
+            # writes the next occupant's row as a values-only update
+            out["pages"] = SlotLeaf((B, self.slot_pages(max_len)), 0,
+                                    STATE, jnp.int32)
+        return out
+
+    def _page_leaf(self, s: SlotLeaf) -> SlotLeaf:
+        """CACHE leaves swap their (slot, seq) axis pair — always adjacent,
+        seq = slot_axis + 1 — for the shared (n_pages, page_size) pool
+        axes; STATE/LEN leaves pass through untouched."""
+        if s.kind != CACHE:
+            return s
+        shape = list(s.shape)
+        shape[s.slot_axis] = self.n_pages
+        shape[s.slot_axis + 1] = self.page_size
+        return SlotLeaf(tuple(shape), s.slot_axis, s.kind, s.dtype)
 
     def _dims(self, cache) -> Tuple[int, int, int]:
-        """Recover (n_slots, max_len, src_cap) from a concrete cache."""
+        """Recover (n_slots, max_len, src_cap) from a concrete cache.
+
+        Paged caches round max_len up to a whole page row (CACHE leaf
+        shapes no longer encode it; the page row does) — layouts built
+        from the rounded value are identical, since only the row width
+        ever depends on max_len."""
         cfg = self.cfg
         n_slots = cache["len"].shape[0]
         fam = cfg.family
         lay = cache["layers"]
+        if self.page_size > 0:
+            max_len = cache["pages"].shape[1] * self.page_size
+            src_cap = lay["cross"]["k"].shape[2] if fam == "encdec" else 0
+            return n_slots, max_len, src_cap
         if fam in ("gqa", "gqa_moe", "mamba_hybrid"):
             return n_slots, lay["k"].shape[2], 0
         if fam == "mla_moe":
@@ -242,14 +303,33 @@ class SlotState:
     def snapshot(self, cache, slot: int) -> dict:
         """One slot's private view of the cache (its state leaves, its
         cache rows, its lengths) — the slot axis is indexed out of every
-        leaf."""
+        leaf.  Paged CACHE leaves are gathered through the slot's page
+        row into the contiguous [slot_pages * page_size, ...] view the
+        unpaged snapshot would hold."""
         spec = self.layout(*self._dims(cache))
-        return jax.tree.map(
-            lambda s, x: jnp.take(x, jnp.asarray(slot), axis=s.slot_axis),
-            spec, cache)
+        if self.page_size == 0:
+            return jax.tree.map(
+                lambda s, x: jnp.take(x, jnp.asarray(slot), axis=s.slot_axis),
+                spec, cache)
+        row = cache["pages"][slot]
+
+        def one(s, x):
+            if s.kind == CACHE:
+                ax = s.slot_axis
+                g = jnp.take(x, row, axis=ax)  # (..., P, ps, ...)
+                merged = (x.shape[:ax] + (row.shape[0] * self.page_size,)
+                          + x.shape[ax + 2:])
+                return g.reshape(merged)
+            return jnp.take(x, jnp.asarray(slot), axis=s.slot_axis)
+
+        return jax.tree.map(one, spec, cache)
 
     def advance(self, cache, layers, n_new) -> dict:
         """Fold a step's updated layer state back in, advancing each
-        slot's length by the rows it consumed."""
-        return {"layers": layers,
-                "len": cache["len"] + jnp.asarray(n_new, jnp.int32)}
+        slot's length by the rows it consumed (the page map rides along
+        unchanged — only admission/eviction rewrite it)."""
+        out = {"layers": layers,
+               "len": cache["len"] + jnp.asarray(n_new, jnp.int32)}
+        if "pages" in cache:
+            out["pages"] = cache["pages"]
+        return out

@@ -39,12 +39,14 @@ from .adapters import AdapterStore, extract_pack
 from .engine import ContinuousEngine, EngineCorrupted, EngineStats
 from .frontend import (RequestStatus, ServingFrontend, Ticket,
                        TERMINAL_STATUSES, slo_summary)
+from .paging import PageTable, pages_for
 from .scheduler import Request, Scheduler, Slot
 from .trace import (bursty_arrivals, make_trace, poisson_arrivals, replay,
                     static_schedule)
 
 __all__ = ["AdapterStore", "ContinuousEngine", "EngineCorrupted",
-           "EngineStats", "Request", "RequestStatus", "Scheduler",
-           "ServingFrontend", "Slot", "Ticket", "TERMINAL_STATUSES",
-           "bursty_arrivals", "extract_pack", "make_trace",
-           "poisson_arrivals", "replay", "slo_summary", "static_schedule"]
+           "EngineStats", "PageTable", "Request", "RequestStatus",
+           "Scheduler", "ServingFrontend", "Slot", "Ticket",
+           "TERMINAL_STATUSES", "bursty_arrivals", "extract_pack",
+           "make_trace", "pages_for", "poisson_arrivals", "replay",
+           "slo_summary", "static_schedule"]

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .paging import PageTable, pages_for
 from .scheduler import Request, Scheduler
 
 
@@ -119,7 +120,9 @@ class EngineCorrupted(RuntimeError):
 
 @dataclasses.dataclass
 class EngineStats:
-    """Aggregates one :meth:`ContinuousEngine.run`.
+    """Aggregates :meth:`ContinuousEngine.step_once` iterations (a
+    :meth:`ContinuousEngine.run` or any external per-step driver —
+    wall clock accrues per step, not per run).
 
     ``slot_steps`` / ``busy_slot_steps`` are counted in MODEL-STEP units
     on every path: each dispatch that runs C model rows per slot adds
@@ -174,12 +177,26 @@ class ContinuousEngine:
     extra scan program alongside the k in {1, 2, 4} ladder it already
     needs — the clamp keeps the compile-bound invariant of
     O(log decode_burst) programs.
+
+    ``page_size > 0`` switches the CACHE leaves to the paged pool layout
+    (``repro.serving.paging``): ``n_pages`` pages (page 0 reserved null;
+    default sizes the pool to the contiguous capacity, n_slots x
+    ceil(max_len / page_size) + 1 — shrink it to oversubscribe) are
+    allocated per request at admission and shared across slots, with
+    hash-based prefix reuse skipping the prefill of full prompt pages an
+    earlier request already wrote.  The page map rides inside the cache
+    pytree as plain int32 values, so admission/eviction remaps never
+    retrace the compiled steps; token streams are identical to the
+    contiguous layout (pinned by tests/test_serving_paged.py).
+    Recurrent STATE (and the encdec cross cache) stays per-slot; rwkv
+    has no CACHE leaves to page and fails loudly at construction.
     """
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  prefill_chunk: int = 8, decode_burst: int = 8,
                  cache_dtype=jnp.float32, max_src: int = 0,
-                 step_hook=None, adapters=None):
+                 step_hook=None, adapters=None, page_size: int = 0,
+                 n_pages: Optional[int] = None):
         if not lm.supports_ragged():
             raise NotImplementedError(
                 f"continuous engine: family {lm.cfg.family!r} has no "
@@ -210,7 +227,17 @@ class ContinuousEngine:
         db = max(1, decode_burst)
         self.decode_burst = 1 << (db.bit_length() - 1)
         self.cache_dtype = cache_dtype
-        self.slot_state = lm.slot_state()
+        self.page_size = page_size
+        if page_size > 0:
+            slot_pages = pages_for(max_len, page_size)
+            if n_pages is None:
+                n_pages = n_slots * slot_pages + 1   # +1: reserved null
+            self.n_pages = n_pages
+            # raises for rwkv (no CACHE leaves to page) and n_pages < 2
+            self.slot_state = lm.slot_state(page_size, n_pages)
+        else:
+            self.n_pages = 0
+            self.slot_state = lm.slot_state()
         # encdec: per-slot frozen cross-cache capacity (encoder frames)
         self.max_src = (max(1, max_src or int(max_len * lm.cfg.source_frac))
                         if lm.cfg.family == "encdec" else 0)
@@ -226,14 +253,26 @@ class ContinuousEngine:
 
     def reset(self):
         """Drop all queued/in-flight state (compiled steps are shared
-        module-wide and survive)."""
-        self.sched = Scheduler(self.n_slots, self.max_len, self.prefill_chunk)
+        module-wide and survive).  Paged engines also rebuild the page
+        table — registered prefix hashes do not survive a reset (their
+        device pages are reinitialized)."""
+        pt = None
+        if self.page_size > 0:
+            pt = PageTable(self.n_pages, self.page_size,
+                           self.slot_state.slot_pages(self.max_len))
+        self.sched = Scheduler(self.n_slots, self.max_len,
+                               self.prefill_chunk, page_table=pt)
         self.cache = self.slot_state.init(
             self.n_slots, self.max_len, dtype=self.cache_dtype,
             src_cap=self.max_src or None)
         self.stats = EngineStats()
         self._adapter_key = None
         self._refresh_adapters()
+
+    @property
+    def page_table(self) -> Optional[PageTable]:
+        """The live page pool (None on contiguous engines)."""
+        return self.sched.page_table
 
     # ---------------- public API ----------------
 
@@ -266,6 +305,11 @@ class ContinuousEngine:
                 raise ValueError(
                     f"src must be [Ss, d_model={self.lm.cfg.d_model}]; "
                     f"got {src.shape}")
+            if src.shape[0] == 0:
+                raise ValueError(
+                    "src has zero frames; pass src=None for a src-less "
+                    "request (a [0, d] src would burn an encoder dispatch "
+                    "at admission to pin nothing)")
             if src.shape[0] > self.max_src:
                 raise ValueError(
                     f"request has {src.shape[0]} encoder frames but the "
@@ -278,16 +322,28 @@ class ContinuousEngine:
 
     def run(self) -> Dict[int, List[int]]:
         """Serve until queue and slots drain; returns rid -> token list
-        (stats in :attr:`stats`)."""
-        t0 = time.time()
+        (stats in :attr:`stats` — wall clock accumulates per
+        :meth:`step_once`, so externally-driven loops report it too)."""
         while self.sched.has_work:
             self.step_once()
         # republish the (now empty) live-id set: without this, the store
         # would keep refusing to evict the last batch's adapters after
         # the engine has fully drained
         self._refresh_adapters()
-        self.stats.seconds += time.time() - t0
         return self.sched.outputs
+
+    def evict_slot(self, i: int):
+        """Evict slot ``i`` (cancellation / deadline expiry) ATOMICALLY:
+        the scheduler frees the slot and releases its pages, and the
+        live-adapter set is republished in the same call — so the
+        AdapterStore can evict the dropped request's adapter (and the
+        page pool can re-hand its pages) immediately, not at the next
+        engine step.  Callers must use this, not
+        ``sched.evict_slot``, whenever the engine serves adapters or a
+        paged cache.  Returns the evicted Slot (or None if free)."""
+        s = self.sched.evict_slot(i)
+        self._refresh_adapters()
+        return s
 
     def poison_cache(self):
         """Overwrite every floating-point leaf of the decode state with
@@ -310,7 +366,18 @@ class ContinuousEngine:
         slots -> one ragged/burst dispatch -> commit.  Raises
         :class:`EngineCorrupted` (before commit) if the dispatch produced
         non-finite logits, and propagates whatever the step hook raises
-        (e.g. :class:`repro.runtime.fault.InjectedFault`)."""
+        (e.g. :class:`repro.runtime.fault.InjectedFault`).  Wall clock
+        accrues to :attr:`stats` HERE (not in :meth:`run`), so
+        ``tok_per_s`` is meaningful for any driver — including an
+        external per-step loop like ``ServingFrontend`` — and even for a
+        step that dies mid-dispatch."""
+        t0 = time.time()
+        try:
+            self._step_once_inner()
+        finally:
+            self.stats.seconds += time.time() - t0
+
+    def _step_once_inner(self):
         if self.step_hook is not None:
             self.step_hook(self)
         filled = self.sched.admit()
@@ -323,12 +390,30 @@ class ContinuousEngine:
             mask[filled] = True
             self.cache = _JIT_RESET(self.slot_state, self.cache,
                                     jnp.asarray(mask))
+            self._publish_pages(filled)
             self._pin_cross(filled)
         self._refresh_adapters()
         if self.sched.all_decoding:
             self._run_burst()
         else:
             self._run_ragged()
+
+    def _publish_pages(self, filled):
+        """Paged admission: write each refilled slot's page row — and seed
+        its length with the prefix tokens already served from shared
+        pages — into the cache pytree.  Pure value updates on unchanged
+        shapes: the compiled steps never retrace as the page map churns.
+        Runs AFTER the refill reset (which nulls the rows it is about to
+        write) and must complete before the next dispatch reads them."""
+        if self.page_size == 0:
+            return
+        pt = self.sched.page_table
+        idx = jnp.asarray(filled)
+        rows = np.stack([pt.page_row(i) for i in filled])
+        lens = np.asarray([self.sched.slots[i].pp for i in filled], np.int32)
+        self.cache["pages"] = self.cache["pages"].at[idx].set(
+            jnp.asarray(rows))
+        self.cache["len"] = self.cache["len"].at[idx].set(jnp.asarray(lens))
 
     def _refresh_adapters(self):
         """Rebind ``self.params`` to the store's serving tree for the

@@ -144,12 +144,14 @@ class ServingFrontend:
                  default_ttft_deadline_s: Optional[float] = None,
                  injector: Optional[Callable] = None,
                  guard=None, clock: Callable[[], float] = time.monotonic,
-                 cache_dtype=None, max_src: int = 0, adapters=None):
+                 cache_dtype=None, max_src: int = 0, adapters=None,
+                 page_size: int = 0, n_pages=None):
         kw = {} if cache_dtype is None else {"cache_dtype": cache_dtype}
         self.engine = ContinuousEngine(
             lm, params, n_slots=n_slots, max_len=max_len,
             prefill_chunk=prefill_chunk, decode_burst=decode_burst,
-            max_src=max_src, step_hook=injector, adapters=adapters, **kw)
+            max_src=max_src, step_hook=injector, adapters=adapters,
+            page_size=page_size, n_pages=n_pages, **kw)
         self.queue_cap = queue_cap
         self.max_recoveries = max_recoveries
         self.default_deadline_s = default_deadline_s
@@ -407,7 +409,9 @@ class ServingFrontend:
                 continue
             for i, s in enumerate(sched.slots):
                 if s is not None and s.req.rid == rid:
-                    sched.evict_slot(i)
+                    # engine-level eviction: releases pages + republishes
+                    # live adapter ids atomically with the slot free
+                    self.engine.evict_slot(i)
                     t.tokens = t._base + s.emitted
                     self._finish(t, RequestStatus.CANCELLED,
                                  error=f"cancelled in flight after "
@@ -447,7 +451,7 @@ class ServingFrontend:
             t = self.tickets[s.req.rid]
             why = self._expiry(t, now)
             if why:
-                sched.evict_slot(i)
+                self.engine.evict_slot(i)
                 t.tokens = t._base + s.emitted
                 self._finish(t, RequestStatus.TIMED_OUT,
                              error=f"{why}; emitted {len(t.tokens)}/"

@@ -21,6 +21,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .paging import PageTable
+
 
 @dataclasses.dataclass
 class Request:
@@ -70,13 +72,26 @@ class Slot:
 
 
 class Scheduler:
-    """FIFO admission into ``n_slots`` cache slots with per-slot eviction."""
+    """FIFO admission into ``n_slots`` cache slots with per-slot eviction.
 
-    def __init__(self, n_slots: int, max_len: int, prefill_chunk: int = 8):
+    ``page_table`` (optional) switches admission to paged-cache
+    accounting: a request enters a free slot only when the
+    :class:`~repro.serving.paging.PageTable` can cover it — otherwise
+    admission backs off LOUDLY (the request stays queued, the pool's
+    ``alloc_backoffs`` counts the stall) instead of silently overwriting
+    live pages.  Prefix hits at admission pre-advance the slot's prompt
+    cursor past the reused tokens (their prefill chunks are skipped
+    outright); as prefill fills whole prompt pages, :meth:`commit`
+    registers them for future reuse, and slot release (finish or
+    eviction) returns the slot's pages in the same call."""
+
+    def __init__(self, n_slots: int, max_len: int, prefill_chunk: int = 8,
+                 page_table: Optional[PageTable] = None):
         assert n_slots >= 1 and prefill_chunk >= 1
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
+        self.page_table = page_table
         self.queue: deque = deque()
         self.slots: List[Optional[Slot]] = [None] * n_slots
         self.outputs: Dict[int, List[int]] = {}
@@ -97,6 +112,14 @@ class Scheduler:
             raise ValueError(
                 f"request needs {len(req.prompt)} + {req.max_new_tokens} "
                 f"cache positions but slots hold {self.max_len}")
+        if (self.page_table is not None
+                and not self.page_table.fits(len(req.prompt)
+                                             + req.max_new_tokens)):
+            raise ValueError(
+                f"request needs {len(req.prompt)} + {req.max_new_tokens} "
+                f"cache positions but the page pool can never cover it "
+                f"(capacity {self.page_table.capacity} pages of "
+                f"{self.page_table.page_size})")
         if req.rid < 0:
             req.rid = self._next_rid
         # auto-assignment always skips past pre-assigned rids, and a
@@ -111,15 +134,36 @@ class Scheduler:
 
     def admit(self) -> List[int]:
         """Move queued requests into free slots; returns the refilled slot
-        indices (the engine resets their cache lengths to 0 — the slot's
-        stale KV from the previous occupant is never read because every
-        attention mask is bounded by the slot's own length)."""
+        indices (the engine resets their cache lengths — the slot's stale
+        KV from the previous occupant is never read because every
+        attention mask is bounded by the slot's own length).
+
+        With a page table, each admission must first secure its pages;
+        when the pool can't cover the queue head, admission STOPS (FIFO
+        order is preserved — later, smaller requests don't jump a starved
+        head) and the head retries next step as slots/pages free up.  A
+        prefix hit pre-advances the new slot's prompt cursor: the reused
+        tokens' KV already sits in shared pages, so their prefill chunks
+        never run (the engine seeds the slot's cache length to match)."""
         filled = []
         for i in range(self.n_slots):
             if not self.queue:
                 break
             if self.slots[i] is None:
-                self.slots[i] = Slot(req=self.queue.popleft())
+                req = self.queue[0]
+                reused = 0
+                if self.page_table is not None:
+                    # the adapter id salts the prefix hashes: a prompt's
+                    # KV depends on which adapter computed it, so pages
+                    # are only ever shared within one tenant
+                    got = self.page_table.admit(
+                        i, req.prompt, len(req.prompt) + req.max_new_tokens,
+                        salt=req.adapter_id)
+                    if got is None:
+                        break          # loud backoff: head stays queued
+                    _, reused = got
+                self.queue.popleft()
+                self.slots[i] = Slot(req=req, pp=reused)
                 filled.append(i)
         return filled
 
@@ -128,10 +172,13 @@ class Scheduler:
         cancellation: the request is dropped exactly like an EOS eviction
         frees the slot, but nothing enters :attr:`outputs`).  Returns the
         evicted slot (partial ``emitted`` intact) or None if it was free.
-        The engine resets the slot's cache row when it is refilled, so no
-        device work is needed here."""
+        The slot's pages are released in the same call; the engine resets
+        the slot's cache row when it is refilled, so no device work is
+        needed here."""
         s = self.slots[i]
         self.slots[i] = None
+        if s is not None and self.page_table is not None:
+            self.page_table.release(i)
         return s
 
     def remove_queued(self, rid: int) -> bool:
@@ -211,11 +258,23 @@ class Scheduler:
     def commit(self, next_tokens: np.ndarray) -> List[int]:
         """Record the step's argmax tokens; returns rids finished (and
         evicted) this step.  A slot whose plan consumed its final prompt
-        token emits its FIRST generated token here."""
+        token emits its FIRST generated token here.
+
+        Paged mode: the dispatch whose results arrive here has WRITTEN
+        this step's rows on device, so prompt pages it completed become
+        registrable for prefix reuse now (never earlier — a hit on an
+        unwritten page would read garbage).  Registration runs before any
+        release below, so a finishing request's prompt pages park in the
+        reusable cached tier rather than the plain free list."""
         done = []
+        pt = self.page_table
         for i, s in enumerate(self.slots):
-            if s is None or self._planned[i] == 0 or s.prefilling:
-                continue  # free, idle, or still mid-prompt: logits are noise
+            if s is None or self._planned[i] == 0:
+                continue  # free or idle
+            if pt is not None:
+                pt.register_filled(i, s.pp)
+            if s.prefilling:
+                continue  # still mid-prompt: logits are noise
             tok = int(next_tokens[i])
             s.emitted.append(tok)
             s.last_tok = tok
@@ -223,6 +282,8 @@ class Scheduler:
                                     and tok == s.req.eos_id):
                 self.outputs[s.req.rid] = s.emitted
                 self.slots[i] = None
+                if pt is not None:
+                    pt.release(i)
                 done.append(s.req.rid)
         return done
 
@@ -258,5 +319,7 @@ class Scheduler:
             if int(remaining[i]) <= 0:
                 self.outputs[s.req.rid] = s.emitted
                 self.slots[i] = None
+                if self.page_table is not None:
+                    self.page_table.release(i)
                 done.append(s.req.rid)
         return done

@@ -28,7 +28,7 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
                gen_lens: Sequence[int] = (2, 4, 12),
                eos_id: Optional[int] = None,
                adapter_ids: Optional[Sequence] = None,
-               store=None) -> List[Request]:
+               store=None, shared_prefix: int = 0) -> List[Request]:
     """Random-token requests cycling through the given length mixes.
 
     Lengths are drawn round-robin (not sampled) so a trace is exactly
@@ -40,7 +40,12 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
     :class:`~repro.serving.adapters.AdapterStore` adapter (name, id, or
     0/None for the bare base).  Pass ``store`` to resolve names and
     validate every id against the registered set up front — a typo'd
-    tenant fails HERE, not as a mid-replay engine error."""
+    tenant fails HERE, not as a mid-replay engine error.
+
+    ``shared_prefix > 0`` prepends the SAME ``shared_prefix`` random
+    tokens (one seeded draw) to every prompt — the shared-system-prompt
+    workload the paged cache's prefix reuse targets.  Prompt lengths
+    then count the per-request tail; total prompt = shared + tail."""
     if vocab <= 4:
         # ids are drawn from [4, vocab): a tiny smoke vocab would make
         # numpy raise a cryptic "low >= high" (or sample an empty range)
@@ -59,11 +64,14 @@ def make_trace(n_requests: int, vocab: int, *, seed: int = 0,
                 "adapter_ids contains names; pass store= to resolve them")
         aids = [int(cycle[i % len(cycle)]) for i in range(n_requests)]
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(4, vocab, size=(shared_prefix,)).astype(np.int32)
     reqs = []
     for i in range(n_requests):
         p = int(prompt_lens[i % len(prompt_lens)])
         g = int(gen_lens[i % len(gen_lens)])
         prompt = rng.integers(4, vocab, size=(p,)).astype(np.int32)
+        if shared_prefix:
+            prompt = np.concatenate([prefix, prompt])
         reqs.append(Request(prompt=prompt, max_new_tokens=g, eos_id=eos_id,
                             rid=i, adapter_id=aids[i]))
     return reqs

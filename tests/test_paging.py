@@ -1,0 +1,255 @@
+"""Hypothesis property suite + units for the host-side PageTable
+allocator (the paged-KV-cache bookkeeping the scheduler drives):
+
+  * a live page is never double-allocated: at all times, the pages held
+    by distinct slots are disjoint EXCEPT for refcounted shared prefix
+    pages — and a page is never simultaneously live and free/cached;
+  * refcounts balance: after arbitrary admit / register / release /
+    prefix-hit sequences, releasing every slot returns the pool to
+    exactly ``capacity`` allocatable pages with all refcounts zero;
+  * free-list capacity accounting is exact: free + cached + live ==
+    capacity after every operation, and admit() returns None (loud
+    backoff, nothing mutated) precisely when the pool cannot cover the
+    request's fresh pages.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback sweep (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serving import PageTable, pages_for
+from repro.serving.paging import NULL_PAGE
+
+
+def _prompt(rng, n, shared=0):
+    """Random prompt of n tokens; the first ``shared`` tokens are a fixed
+    vector so prompts with the same shared length hit each other's
+    registered prefix pages."""
+    p = rng.integers(100, 200, size=(n,)).astype(np.int32)
+    p[:shared] = np.arange(shared)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# property suite
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=40)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_pages=st.integers(min_value=4, max_value=24),
+       page_size=st.sampled_from([1, 2, 4]),
+       n_ops=st.integers(min_value=5, max_value=60))
+def test_page_table_invariants_under_random_ops(seed, n_pages, page_size,
+                                                n_ops):
+    """Random admit / register / release sequences (with shared prefixes
+    so the cached/revive tiers are exercised) keep every internal
+    invariant; full release drains back to exactly capacity pages."""
+    rng = np.random.default_rng(seed)
+    n_slots = 4
+    slot_pages = max(2, (n_pages - 1) // 2)
+    pt = PageTable(n_pages, page_size, slot_pages)
+    live = {}  # slot -> (prompt, total)
+
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        if op == 0:  # admit into a free slot
+            free = [i for i in range(n_slots) if i not in live]
+            if not free:
+                continue
+            slot = int(rng.choice(free))
+            p_len = int(rng.integers(1, slot_pages * page_size))
+            shared = int(rng.integers(0, p_len + 1))
+            total = min(p_len + int(rng.integers(1, 4)),
+                        slot_pages * page_size)
+            prompt = _prompt(rng, p_len, shared)
+            before = pt.n_free
+            got = pt.admit(slot, prompt, total)
+            if got is None:
+                # loud backoff must not have mutated anything
+                assert pt.n_free == before
+            else:
+                row, reused = got
+                assert reused % page_size == 0
+                assert reused < len(prompt)  # never the whole prompt
+                n_needed = pages_for(total, page_size)
+                assert (row[:n_needed] != NULL_PAGE).all()
+                assert (row[n_needed:] == NULL_PAGE).all()
+                live[slot] = (prompt, total)
+        elif op == 1 and live:  # register some prefill progress
+            slot = int(rng.choice(list(live)))
+            prompt, _ = live[slot]
+            pt.register_filled(slot, int(rng.integers(0, len(prompt) + 1)))
+        elif op == 2 and live:  # release
+            slot = int(rng.choice(list(live)))
+            pt.release(slot)
+            del live[slot]
+        pt.check_invariants()
+        # exact capacity accounting, and live slots hold disjoint private
+        # pages (shared pages have ref > 1, never ref mismatch)
+        assert pt.n_free + pt.n_used == pt.capacity
+
+    for slot in list(live):
+        pt.release(slot)
+    pt.check_invariants()
+    assert pt.n_free == pt.capacity
+    assert (pt.ref == 0).all()
+    assert pt.n_used == 0
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       page_size=st.sampled_from([2, 4]))
+def test_page_table_never_double_allocates_live_page(seed, page_size):
+    """Fill the pool with non-sharing prompts: all allocated pages are
+    pairwise disjoint, and once the pool is exhausted admit() backs off
+    rather than handing out a page someone holds."""
+    rng = np.random.default_rng(seed)
+    pt = PageTable(n_pages=9, page_size=page_size, slot_pages=4)
+    seen = set()
+    slot = 0
+    while True:
+        tokens = int(rng.integers(1, 4 * page_size + 1))
+        got = pt.admit(slot, _prompt(rng, max(1, tokens - 1)), tokens)
+        if got is None:
+            assert pages_for(tokens, page_size) > pt.n_free
+            break
+        row, reused = got
+        assert reused == 0  # random prompts: no prefix hits
+        pages = {int(p) for p in row if p != NULL_PAGE}
+        assert not (pages & seen), "live page handed out twice"
+        seen |= pages
+        slot += 1
+    assert pt.alloc_backoffs == 1
+
+
+# ---------------------------------------------------------------------------
+# unit: prefix reuse mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_hit_maps_shared_pages_and_caps_at_last_token():
+    """A second identical prompt reuses every FULL prefix page except
+    that the final prompt token is always left to recompute (its model
+    step produces the first generated token's logits)."""
+    pt = PageTable(n_pages=16, page_size=4, slot_pages=4)
+    prompt = np.arange(12, dtype=np.int32)     # exactly 3 pages
+    row0, reused0 = pt.admit(0, prompt, 14)
+    assert reused0 == 0
+    pt.register_filled(0, 12)                  # prefill done
+
+    row1, reused1 = pt.admit(1, prompt, 14)
+    # cap: (12 - 1) // 4 = 2 pages, NOT all 3 — last token recomputes
+    assert reused1 == 8
+    assert row1[:2].tolist() == row0[:2].tolist()   # shared
+    assert row1[2] != row0[2]                       # private tail
+    assert pt.ref[row0[0]] == 2 and pt.ref[row0[1]] == 2
+    pt.check_invariants()
+
+    # divergent prompt only reuses the pages its prefix matches
+    div = prompt.copy()
+    div[5] = 99                                # page 1 differs
+    _, reused2 = pt.admit(2, div, 14)
+    assert reused2 == 4                        # page 0 only
+    pt.check_invariants()
+
+
+def test_salt_partitions_prefix_hashes():
+    """The same prompt under different salts (the scheduler passes each
+    request's adapter id) never shares pages: a prompt's KV depends on
+    which adapter computed it, so tenant B must not read pages tenant
+    A's weights wrote."""
+    pt = PageTable(n_pages=16, page_size=4, slot_pages=4)
+    prompt = np.arange(12, dtype=np.int32)
+    pt.admit(0, prompt, 14, salt=1)
+    pt.register_filled(0, 12)
+    _, reused_same = pt.admit(1, prompt, 14, salt=1)
+    assert reused_same == 8                    # within-tenant: shared
+    _, reused_other = pt.admit(2, prompt, 14, salt=2)
+    assert reused_other == 0                   # cross-tenant: nothing
+    pt.check_invariants()
+
+
+def test_partial_pages_and_generated_tokens_never_register():
+    pt = PageTable(n_pages=16, page_size=4, slot_pages=4)
+    prompt = np.arange(6, dtype=np.int32)      # 1.5 pages
+    pt.admit(0, prompt, 10)
+    pt.register_filled(0, 6)                   # only page 0 is FULL prompt
+    # progress past the prompt (generated tokens) registers nothing more
+    pt.register_filled(0, 10)
+    assert len(pt._key2page) == 1
+    _, reused = pt.admit(1, prompt, 10)
+    assert reused == 4                         # page 0 only
+    pt.check_invariants()
+
+
+def test_released_registered_pages_park_cached_and_revive():
+    """Finishing a request parks its registered prompt pages in the
+    cached tier (still hittable); a later identical prompt revives them
+    without prefill, and reclaiming for fresh allocation drops the
+    hash only when the free list runs dry — LRU first."""
+    pt = PageTable(n_pages=8, page_size=2, slot_pages=3)
+    prompt = np.arange(5, dtype=np.int32)      # 2 full pages + 1 token
+    pt.admit(0, prompt, 6)                     # 3 pages
+    pt.register_filled(0, 5)
+    pt.release(0)
+    assert pt.n_used == 0 and len(pt._cached) == 2
+    pt.check_invariants()
+
+    # revive: same prompt hits both cached pages
+    _, reused = pt.admit(1, prompt, 6)
+    assert reused == 4
+    pt.release(1)
+
+    # exhaust the free list with a non-matching request: cached pages are
+    # reclaimed LRU and their hashes dropped
+    big = _prompt(np.random.default_rng(0), 5)
+    pt.admit(2, big, 6)
+    pt.admit(3, np.asarray([7, 8, 9], np.int32), 6)   # needs reclaim
+    pt.check_invariants()
+    _, reused_after = pt.admit(4, prompt, 2) if pt.n_free else (None, 0)
+    # whatever survived, invariants hold and nothing double-allocated
+    pt.check_invariants()
+
+
+def test_admit_backoff_mutates_nothing_and_counts():
+    pt = PageTable(n_pages=4, page_size=4, slot_pages=3)   # 3 usable pages
+    assert pt.admit(0, np.arange(8, dtype=np.int32), 12) is not None
+    before_free = pt.n_free
+    assert pt.admit(1, np.arange(9, 13, dtype=np.int32), 8) is None
+    assert pt.alloc_backoffs == 1 and pt.n_free == before_free
+    pt.release(0)
+    assert pt.admit(1, np.arange(9, 13, dtype=np.int32), 8) is not None
+    pt.check_invariants()
+
+
+def test_fits_is_the_submit_time_guard():
+    pt = PageTable(n_pages=6, page_size=4, slot_pages=4)   # 5 usable
+    assert pt.fits(16)           # 4 pages <= min(5, 4)
+    assert not pt.fits(17)       # 5 pages > slot_pages
+    small = PageTable(n_pages=3, page_size=4, slot_pages=8)
+    assert not small.fits(12)    # 3 pages > capacity 2
+
+
+def test_constructor_rejects_degenerate_pools():
+    with pytest.raises(ValueError):
+        PageTable(n_pages=1, page_size=4, slot_pages=2)   # no usable page
+    with pytest.raises(ValueError):
+        PageTable(n_pages=8, page_size=0, slot_pages=2)
+    with pytest.raises(ValueError):
+        PageTable(n_pages=8, page_size=4, slot_pages=0)
+
+
+def test_double_admit_same_slot_raises():
+    pt = PageTable(n_pages=8, page_size=2, slot_pages=2)
+    pt.admit(0, np.arange(2, dtype=np.int32), 3)
+    with pytest.raises(ValueError, match="already holds pages"):
+        pt.admit(0, np.arange(2, dtype=np.int32), 3)

@@ -137,6 +137,14 @@ def test_encdec_submit_validates_src(served_encdec):
     with pytest.raises(ValueError, match="d_model"):
         eng.submit(np.arange(4, 6, dtype=np.int32), 2,
                    src=np.zeros((3, cfg.d_model + 1), np.float32))
+    # a [0, d] src is almost certainly a caller bug (an empty memory
+    # spelled as an array instead of None) — reject it loudly rather
+    # than burn an encoder dispatch at admission to pin nothing
+    with pytest.raises(ValueError, match="zero frames"):
+        eng.submit(np.arange(4, 6, dtype=np.int32), 2,
+                   src=np.zeros((0, cfg.d_model), np.float32))
+    # src=None remains the supported spelling for a src-less request
+    eng.submit(np.arange(4, 6, dtype=np.int32), 2, src=None)
 
 
 def test_src_rejected_for_non_encdec_family():

@@ -137,6 +137,49 @@ def test_engine_occupancy_pinned_on_hand_computed_trace(served):
     assert st.tokens_out == 4
 
 
+def test_stats_seconds_accrue_per_step_for_external_drivers(served):
+    """Wall clock lives in :meth:`step_once`, not :meth:`run` — an
+    externally-driven loop (the frontend's) must still report seconds
+    and a finite tok_per_s.  Regression: timing used to wrap only run(),
+    so frontend-served engines claimed 0 s and absurd tok/s."""
+    cfg, lm, merged = served
+    eng = ContinuousEngine(lm, merged, n_slots=2, max_len=8,
+                           prefill_chunk=4, decode_burst=4)
+    eng.submit(np.arange(4, 6, dtype=np.int32), 2)
+    while eng.sched.has_work:   # drive per-step, never calling run()
+        eng.step_once()
+    st = eng.stats
+    assert st.tokens_out == 2
+    assert st.seconds > 0.0
+    assert st.tok_per_s == st.tokens_out / st.seconds
+
+
+@pytest.mark.slow
+def test_burst_path_eos_matches_ragged_token_for_token(served):
+    """EOS hit INSIDE a fused decode burst: the emitted stream includes
+    the EOS, the slot idles (-1 rows) for the burst's remaining steps,
+    and commit_burst folds back exactly the tokens the per-step ragged
+    path (decode_burst=1) produces."""
+    cfg, lm, merged = served
+    trace = make_trace(2, cfg.vocab, seed=13, prompt_lens=(4,),
+                       gen_lens=(12,))
+    ref = _reference(lm, merged, trace[0])
+    trace[0].eos_id = ref[5]  # stops mid-burst on the 8-step burst path
+    cut = ref.index(trace[0].eos_id) + 1
+
+    outs = []
+    for burst in (1, 8):  # ragged per-step vs fused scan
+        eng = ContinuousEngine(lm, merged, n_slots=2, max_len=16,
+                               prefill_chunk=4, decode_burst=burst)
+        for r in trace:
+            eng.submit(r.prompt, r.max_new_tokens, r.eos_id, rid=r.rid)
+        outs.append(eng.run())
+    assert outs[0] == outs[1]
+    assert outs[1][0] == ref[:cut]          # EOS inclusive, then stopped
+    assert outs[1][0][-1] == trace[0].eos_id
+    assert len(outs[1][1]) == trace[1].max_new_tokens
+
+
 def test_make_trace_rejects_tiny_vocab():
     """vocab <= 4 would make rng.integers(4, vocab) crash (or sample an
     empty range) deep inside numpy; fail loudly at the API instead."""
