@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast smoke lint verify verify-fast dev-deps
+.PHONY: test test-fast smoke lint analyze verify verify-fast dev-deps
 
 dev-deps:
 	pip install -r requirements-dev.txt
@@ -24,6 +24,13 @@ lint:
 	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
 	else echo "[lint] ruff not installed; run 'make dev-deps'"; fi
 
-verify: lint test smoke
+# repo-invariant static analysis (tools/repro_lint): host purity,
+# scheme-key ownership, module-level-jit discipline, traced-value
+# control flow, frontend lock contract, serving determinism.
+# Exit 0 clean / 1 violations / 2 waiver-config errors.
+analyze:
+	$(PY) -m tools.repro_lint src tests
 
-verify-fast: lint test-fast
+verify: lint analyze test smoke
+
+verify-fast: lint analyze test-fast

@@ -15,7 +15,7 @@ import os
 
 import repro.configs as C
 from repro.configs.base import SHAPES, cells_for
-from repro.perf import analyze_hlo_text, roofline_terms, HW
+from repro.perf import analyze_hlo_text, roofline_terms
 
 
 def fmt_s(x: float) -> str:

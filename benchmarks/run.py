@@ -128,7 +128,6 @@ def table4_other_families():
     Beyond-paper: validate across architecture FAMILIES — including an
     attention-free one — fine-tune each reduced arch with QA-LoRA INT4 and
     verify (a) learning, (b) exact merge."""
-    import dataclasses
     import jax
     import jax.numpy as jnp
     import repro.configs as C
@@ -235,10 +234,8 @@ def ablation_rank():
 
 def fig3_dataset_size():
     from benchmarks.common import finetune, answer_accuracy, merge_for_deploy
-    import repro.data.pipeline as dp
     for n in (8, 64, 512):
         # bound the dataset by wrapping example indices (epochs over n)
-        from repro.data import DataConfig, InstructionStream
         import benchmarks.common as bc
 
         orig = bc.make_stream
@@ -849,6 +846,14 @@ def main(argv=None) -> None:
         merged[k] = {n: list(v) for n, v in d.items()}
     with open(path, "w") as f:
         json.dump(merged, f, indent=1)
+    # REPRO_COMPILE_GUARD=1: every engine built above declared budgets
+    # into the ambient guard; a retrace storm fails the bench run loudly
+    # instead of silently skewing the timings it just printed
+    from repro.runtime import compile_guard
+    guard = compile_guard.current()
+    if guard is not None:
+        print(guard.summary())
+        guard.check()
     print(f"# done in {time.time() - t0:.0f}s -> experiments/bench_results.json")
 
 

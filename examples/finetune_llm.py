@@ -15,7 +15,6 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as C
 from repro.models import LM

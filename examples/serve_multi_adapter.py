@@ -18,7 +18,6 @@ single-adapter model — multiplexing is free of cross-tenant interference.
 """
 
 import jax
-import numpy as np
 
 import repro.configs as C
 from repro.launch.mesh import make_cpu_mesh

@@ -3,12 +3,10 @@
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax.numpy as jnp
 
 from repro.models.common import QuantPolicy
-from .base import ArchConfig, ShapeCell, SHAPES, SUBQUADRATIC, cells_for
+from .base import ArchConfig
 
 from . import (pixtral_12b, gemma3_1b, starcoder2_7b, h2o_danube_1_8b,
                deepseek_67b, seamless_m4t_medium, zamba2_7b, mixtral_8x22b,

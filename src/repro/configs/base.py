@@ -3,9 +3,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Optional, Union
 
-import jax.numpy as jnp
 
 from repro.core.schemes import PolicyTree, QuantPolicy
 

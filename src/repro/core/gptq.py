@@ -18,7 +18,6 @@ inverse-Hessian Cholesky factor.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from .quant import QuantizedLinear, pack

@@ -20,7 +20,6 @@ remains INT-N — the property QLoRA loses (Appendix B, Eq. 7).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,11 +27,9 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "QuantizedLinear",

@@ -63,7 +63,8 @@ from . import quant as quant_lib
 __all__ = [
     "QuantPolicy", "FP", "PolicyTree", "resolve_policy", "resolve_path",
     "LinearScheme", "LinearParams", "register_scheme", "get_scheme",
-    "registered_schemes", "is_linear", "dense_linear", "from_dense_linear",
+    "registered_schemes", "is_linear", "dense_linear", "quantized_base",
+    "adapter_params", "from_dense_linear",
     "linear_init", "linear_apply", "merge_linear", "dense_view",
     "map_linears", "merge_tree", "convert_tree", "trainable_mask",
     "tree_flops_bytes",
@@ -285,6 +286,37 @@ def dense_linear(w, policy: Optional[QuantPolicy] = None) -> LinearParams:
     pol = policy or dataclasses.replace(FP, dtype=w.dtype)
     return LinearParams(data={"w": w}, scheme="fp",
                         policy=dataclasses.replace(pol, mode="fp"))
+
+
+# schemes whose ``data`` carries a packed INT-N base under "q"
+_QUANT_BASE_SCHEMES = ("intq", "qalora", "qalora_slot")
+
+
+def quantized_base(lp: LinearParams):
+    """The packed :class:`QuantizedLinear` base of a quantized-base
+    scheme — the sanctioned accessor for code that must touch INT-N
+    storage itself (adapter banking, slot serving) rather than a dense
+    or forward view.  Keeps the storage-key layout private to this
+    module."""
+    if not is_linear(lp) or lp.scheme not in _QUANT_BASE_SCHEMES:
+        got = lp.scheme if is_linear(lp) else type(lp).__name__
+        raise ValueError(
+            f"quantized_base: expected one of {_QUANT_BASE_SCHEMES}, "
+            f"got {got!r}")
+    return lp.data["q"]
+
+
+def adapter_params(lp: LinearParams):
+    """The trainable adapter payload (e.g. ``QALoRAParams``) of an
+    adapter-bearing linear, located via the scheme's declared
+    ``trainable_paths`` instead of a hard-coded storage key."""
+    keys = get_scheme(lp.scheme).trainable_paths(lp.data)
+    if len(keys) != 1:
+        raise ValueError(
+            f"adapter_params: scheme {lp.scheme!r} declares "
+            f"{len(keys)} trainable keys {tuple(keys)}; expected exactly "
+            f"one adapter payload")
+    return lp.data[keys[0]]
 
 
 # ---------------------------------------------------------------------------

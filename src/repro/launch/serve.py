@@ -70,6 +70,15 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _decode_step(lm, params, cache, tok):
+    return lm.decode_step(params, cache, tok)
+
+
+# module-level jit (the engine's _JIT_* discipline): every caller shares
+# one trace cache keyed on the hashable LM config
+_JIT_DECODE = jax.jit(_decode_step, static_argnums=0)
+
+
 def merge_model(params, pol=None):
     """Merge every adapter into its quantized base (exact; Appendix B).
 
@@ -132,7 +141,8 @@ def make_loop_generator(lm, params, gen_len: int, max_len: int,
     token-identical to this (tests/test_serve_decode.py) and the decode
     benchmark reports its per-token dispatch cost against the scan path.
     """
-    step = jax.jit(lm.decode_step)
+    def step(params, cache, tok):
+        return _JIT_DECODE(lm, params, cache, tok)
 
     def run(prompts):
         b, prompt_len = prompts.shape
@@ -445,11 +455,10 @@ def main(argv=None):
 
         if args.verify:
             toks = jnp.asarray(prompts)
-            step = jax.jit(lm.decode_step)
             cache_a = lm.init_cache(b, max_len, dtype=jnp.float32)
-            logits_a, _ = step(params, cache_a, toks[:, :1])
+            logits_a, _ = _JIT_DECODE(lm, params, cache_a, toks[:, :1])
             cache_m = lm.init_cache(b, max_len, dtype=jnp.float32)
-            logits_m, _ = step(merged, cache_m, toks[:, :1])
+            logits_m, _ = _JIT_DECODE(lm, merged, cache_m, toks[:, :1])
             err = float(jnp.max(jnp.abs(logits_a - logits_m)))
             print(f"[serve] merge-exactness max|adapter - merged| = {err:.2e}")
             assert err < 5e-2, "merged model diverged from adapter model"

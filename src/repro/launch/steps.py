@@ -10,12 +10,10 @@ All functions also serve the dry-run: they accept abstract
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.lm import LM
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, split_params,

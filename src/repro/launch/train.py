@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None):
@@ -50,11 +49,10 @@ def main(argv=None):
     import dataclasses
     import repro.configs as C
     from repro.models.lm import LM
-    from repro.models.common import QuantPolicy
     from repro.optim import AdamWConfig, adamw_init, split_params, count_params
     from repro.data import make_stream
     from repro.checkpoint import CheckpointManager
-    from repro.runtime import RestartableLoop, StragglerDetector, PreemptionGuard, Heartbeat
+    from repro.runtime import RestartableLoop, PreemptionGuard
     from repro.launch import steps as S
     from repro.launch.mesh import make_production_mesh, make_cpu_mesh
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Optional
 
 import jax

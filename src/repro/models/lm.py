@@ -22,9 +22,7 @@ modality frontends are stubs per the assignment (precomputed embeddings).
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .common import QuantPolicy, linear_init, linear_apply, act_fn, constrain
 

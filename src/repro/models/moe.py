@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import (QuantPolicy, linear_init, linear_apply, act_fn,
-                     constrain, constrain_first)
+                     constrain_first)
 from .scan_utils import cscan
 
 # dispatch-buffer sharding candidates [E, C, d]: full-mesh EP when the

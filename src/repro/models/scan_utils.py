@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,6 @@ weight matrix and stay fp (DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

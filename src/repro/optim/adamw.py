@@ -10,7 +10,6 @@ the (tiny) state with the adapters — documented in DESIGN.md §2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,11 +20,8 @@ exposes remat/redundant compute.
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
-from typing import Dict, Optional
+from typing import Dict
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,2 +1,4 @@
+from .compile_guard import (CompileBudgetExceeded,  # noqa: F401
+                            CompileGuard)
 from .fault import (Heartbeat, StragglerDetector, PreemptionGuard,  # noqa: F401
                     RestartableLoop, FaultInjector, InjectedFault)

@@ -51,8 +51,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import qalora as qalora_lib
-from repro.core.schemes import (LinearParams, QuantPolicy, get_scheme,
-                                map_linears, merge_tree)
+from repro.core.schemes import (LinearParams, QuantPolicy, adapter_params,
+                                get_scheme, map_linears, merge_tree,
+                                quantized_base)
 
 
 @dataclasses.dataclass
@@ -83,7 +84,7 @@ def extract_pack(params) -> Dict[str, qalora_lib.QALoRAParams]:
                 f"{path!r} holds trainable scheme {lp.scheme!r} (its delta "
                 f"is not group-constant, so it cannot share the INT-N "
                 f"base) — merge or convert that tree first")
-        pack[path] = lp.data["ad"]
+        pack[path] = adapter_params(lp)
         return lp
 
     map_linears(params, fn)
@@ -123,7 +124,7 @@ class AdapterStore:
         def alloc(path, lp: LinearParams):
             if lp.scheme != "intq":
                 return lp  # fp / exempt linears carry no adapter bank
-            qt = lp.data["q"]
+            qt = quantized_base(lp)
             lead = tuple(qt.qweight.shape[:-2])
             l_groups = qt.scale.shape[-2]
             d_out = qt.qweight.shape[-1]
@@ -260,16 +261,14 @@ class AdapterStore:
                 raise ValueError(
                     f"adapter {name!r} at {path!r} was trained under an "
                     f"incompatible policy ({'; '.join(bad)})")
-            qt = lp.data.get("q")
-            base_qt = None
             # compare against the base's quantized storage at this path
-            if qt is not None:
-                base_qt = _path_linear(self.base, path).data["q"]
-                if qt.qweight.shape != base_qt.qweight.shape:
-                    raise ValueError(
-                        f"adapter {name!r} at {path!r}: trained base "
-                        f"storage {qt.qweight.shape} != store base "
-                        f"{base_qt.qweight.shape}")
+            qt = quantized_base(lp)
+            base_qt = quantized_base(_path_linear(self.base, path))
+            if qt.qweight.shape != base_qt.qweight.shape:
+                raise ValueError(
+                    f"adapter {name!r} at {path!r}: trained base "
+                    f"storage {qt.qweight.shape} != store base "
+                    f"{base_qt.qweight.shape}")
             return lp
 
         map_linears(trained_params, fn)
@@ -311,7 +310,7 @@ class AdapterStore:
             bank = self._banks.get(path)
             if bank is None:
                 return lp
-            data = {"q": lp.data["q"], "a": bank.a, "b": bank.b,
+            data = {"q": quantized_base(lp), "a": bank.a, "b": bank.b,
                     "ids": jnp.broadcast_to(ids, bank.lead + ids.shape)}
             return LinearParams(
                 data=data, scheme="qalora_slot",
@@ -337,7 +336,7 @@ class AdapterStore:
                 return lp
             ad = qalora_lib.QALoRAParams(a=bank.a[..., aid, :, :],
                                          b=bank.b[..., aid, :, :])
-            qt = qalora_lib.merge(lp.data["q"], ad, bank.policy.s)
+            qt = qalora_lib.merge(quantized_base(lp), ad, bank.policy.s)
             return LinearParams(data={"q": qt}, scheme="intq",
                                 policy=lp.policy, exempt=lp.exempt)
 

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime import compile_guard
 from .paging import PageTable, pages_for
 from .scheduler import Request, Scheduler
 
@@ -249,7 +250,43 @@ class ContinuousEngine:
         # decode state (poison_cache) or raise (crash injection) — see
         # repro.runtime.fault.FaultInjector.  Survives reset().
         self.step_hook = step_hook
+        self._declare_compile_budgets()
         self.reset()
+
+    def _declare_compile_budgets(self):
+        """Register this engine's compile budgets with the active
+        :class:`~repro.runtime.compile_guard.CompileGuard` (no-op when
+        none is active).  Budgets are per ENGINE on shared module-level
+        jits — a second engine accumulates its own allowance onto the
+        same program — and encode the documented invariants.  Programs
+        consuming the cache pytree get x2 "placement" headroom: the
+        host-built cache right after construction/``reset()`` keys one
+        program, and the committed device output of the first jitted
+        dispatch keys another (visible under a mesh context).  Both are
+        one-time variants per shape family, not O(steps) growth.
+
+          * ``_JIT_STEP``: one chunk-width ragged program, x2 placements.
+          * ``_JIT_RESET``: one mask-shaped program, x2 placements.
+          * ``_JIT_BURST``: the pow2 ladder k in {1, 2, .., decode_burst}
+            -> bit_length(decode_burst) scan programs (bursts only ever
+            see a post-dispatch cache, so no placement doubling).
+          * ``_JIT_ENCODE`` (encdec only): pow2 src buckets capped at
+            ``max_src`` -> bit_length(max_src), +1 when the cap itself
+            is not a power of two (the capped top bucket is extra); the
+            encoder takes host-fresh inputs every call, so no doubling.
+        """
+        g = compile_guard.current()
+        if g is None:
+            return
+        g.declare_jit("engine._JIT_STEP", _JIT_STEP, 4)
+        g.declare_jit("engine._JIT_RESET", _JIT_RESET, 2)
+        g.declare_jit("engine._JIT_BURST", _JIT_BURST,
+                      self.decode_burst.bit_length())
+        if self.max_src:
+            budget = self.max_src.bit_length()
+            if self.max_src & (self.max_src - 1):
+                budget += 1
+            g.declare_jit("engine._JIT_ENCODE", _JIT_ENCODE, budget)
 
     def reset(self):
         """Drop all queued/in-flight state (compiled steps are shared
@@ -376,6 +413,11 @@ class ContinuousEngine:
             self._step_once_inner()
         finally:
             self.stats.seconds += time.time() - t0
+        guard = compile_guard.current()
+        if guard is not None:
+            # after the step, not inside the finally: a budget violation
+            # must not mask a real dispatch failure mid-step
+            guard.check()
 
     def _step_once_inner(self):
         if self.step_hook is not None:

@@ -511,8 +511,10 @@ class ServingFrontend:
         self._harvest(now)  # outputs finished BEFORE the failure are real
         sched = self.engine.sched
         if self.n_recoveries > self.max_recoveries:
-            self.fatal = exc
             with self._lock:
+                # set under the lock: submit() checks `fatal` while
+                # holding it, and must never admit into a dying engine
+                self.fatal = exc
                 self.engine.reset()  # drop poisoned state + pending work
                 for t in self.tickets.values():
                     self._finish(t, RequestStatus.FAILED,

@@ -15,12 +15,11 @@ no axis is replicated, never an error.
 
 from __future__ import annotations
 
-from typing import Any, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+from jax.tree_util import DictKey, GetAttrKey
 
 TP_AXIS = "model"
 DP_AXES = ("pod", "data")  # present subset is used

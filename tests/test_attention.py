@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.attention import (flash_attention, decode_attention,
+from repro.models.attention import (flash_attention,
                                     AttnConfig, gqa_init, gqa_apply, gqa_decode,
                                     gqa_init_cache, MLAConfig, mla_init,
                                     mla_apply, mla_decode, mla_init_cache)

@@ -1,0 +1,228 @@
+"""CompileGuard: budget bookkeeping, guard stacking, env-var ambient
+activation, wrapped-counter pins, and the serving engine running a full
+trace under ``REPRO_COMPILE_GUARD=1``.
+"""
+
+import jax
+import pytest
+
+import repro.configs as C
+from repro.launch.serve import merge_model
+from repro.models.lm import LM
+from repro.runtime import compile_guard
+from repro.runtime.compile_guard import (CompileBudgetExceeded, CompileGuard)
+from repro.serving import ContinuousEngine, make_trace
+
+
+class FakeJit:
+    """Duck-typed PjitFunction: just the ``_cache_size`` probe."""
+
+    def __init__(self, n=0):
+        self.n = n
+
+    def _cache_size(self):
+        return self.n
+
+    def compile(self, k=1):
+        self.n += k
+
+
+# ---------------------------------------------------------------------------
+# budget bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_within_budget_passes_and_counts_report():
+    f = FakeJit()
+    g = CompileGuard("t")
+    g.declare_jit("prog", f, budget=2)
+    f.compile(2)
+    g.check()  # at budget: fine
+    assert g.counts() == {"prog": (2, 2)}
+    assert g.count("prog") == 2
+    assert "prog: 2/2" in g.summary()
+
+
+def test_over_budget_raises_with_name_count_and_budget():
+    f = FakeJit()
+    g = CompileGuard("t")
+    g.declare_jit("prog", f, budget=1)
+    f.compile(3)
+    with pytest.raises(CompileBudgetExceeded,
+                       match=r"prog: 3 compiles > budget 1"):
+        g.check()
+    assert g.violations() == [("prog", 3, 1)]
+
+
+def test_baseline_snapshot_ignores_preexisting_compiles():
+    f = FakeJit(n=7)  # warmed before the guarded region
+    g = CompileGuard("t")
+    g.declare_jit("prog", f, budget=0)
+    g.check()  # 7 pre-existing entries never count
+    f.compile()
+    with pytest.raises(CompileBudgetExceeded):
+        g.check()
+
+
+def test_redeclare_accumulates_budget_not_baseline():
+    """Two engines sharing one module-level jit each bring their own
+    allowance; the baseline stays at the FIRST declaration so compiles
+    between declarations still count."""
+    f = FakeJit()
+    g = CompileGuard("t")
+    g.declare_jit("prog", f, budget=2)
+    f.compile(2)
+    g.declare_jit("prog", f, budget=2)
+    f.compile(2)
+    g.check()  # 4 compiles vs accumulated budget 4
+    f.compile()
+    with pytest.raises(CompileBudgetExceeded):
+        g.check()
+
+
+def test_real_jax_jit_cache_probe():
+    """The probe this whole module rides on: a PjitFunction's cache
+    grows once per distinct input shape and never on a cache hit."""
+    f = jax.jit(lambda x: x + 1)
+    g = CompileGuard("t")
+    g.declare_jit("f", f, budget=2)
+    f(jax.numpy.ones((2,)))
+    f(jax.numpy.ones((3,)))
+    f(jax.numpy.ones((3,)))  # cache hit
+    assert g.count("f") == 2
+    g.check()
+    f(jax.numpy.ones((4,)))  # a third shape: retrace storm begins
+    with pytest.raises(CompileBudgetExceeded, match="budget 2"):
+        g.check()
+
+
+# ---------------------------------------------------------------------------
+# stacking + ambient env activation
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_by_default_and_stack_innermost_wins(monkeypatch):
+    monkeypatch.delenv(compile_guard.ENV_FLAG, raising=False)
+    compile_guard.reset_global()
+    assert compile_guard.current() is None  # instrumented sites no-op
+    with CompileGuard("outer") as outer:
+        assert compile_guard.current() is outer
+        with CompileGuard("inner") as inner:
+            assert compile_guard.current() is inner
+        assert compile_guard.current() is outer
+    assert compile_guard.current() is None
+
+
+def test_env_var_creates_one_ambient_guard(monkeypatch):
+    monkeypatch.setenv(compile_guard.ENV_FLAG, "1")
+    compile_guard.reset_global()
+    try:
+        assert compile_guard.enabled()
+        g = compile_guard.current()
+        assert g is not None and g is compile_guard.current()  # lazy, once
+        with CompileGuard("explicit") as e:
+            assert compile_guard.current() is e  # explicit guard shadows env
+        assert compile_guard.current() is g
+    finally:
+        compile_guard.reset_global()
+
+
+# ---------------------------------------------------------------------------
+# wrapped counters
+# ---------------------------------------------------------------------------
+
+
+def _fake_module():
+    """Stand-in module namespace for wrap_counter."""
+    import types
+    return types.SimpleNamespace(__name__="fakemod",
+                                 helper=lambda x: x + 1)
+
+
+def test_wrap_counter_budget_zero_pins_never_called():
+    mod = _fake_module()
+    with CompileGuard("t") as g:
+        g.wrap_counter(mod, "helper", budget=0)
+        g.check()  # not called yet
+        assert mod.helper(1) == 2  # wrapper preserves behavior
+        assert g.count("fakemod.helper") == 1
+        with pytest.raises(CompileBudgetExceeded, match="fakemod.helper"):
+            g.check()
+    # guard exit restored the original
+    assert not hasattr(mod.helper, "__wrapped__")
+
+
+def test_wrap_counter_rewrap_accumulates_budget():
+    mod = _fake_module()
+    with CompileGuard("t") as g:
+        g.wrap_counter(mod, "helper", budget=1)
+        g.wrap_counter(mod, "helper", budget=1)
+        mod.helper(0)
+        mod.helper(0)
+        assert g.count("fakemod.helper") == 2  # single wrapper, not nested
+        g.check()
+    assert not hasattr(mod.helper, "__wrapped__")
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = C.reduced("gemma3-1b")
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+    return cfg, lm, merged
+
+
+def test_engine_smoke_under_env_guard(served, monkeypatch):
+    """REPRO_COMPILE_GUARD=1 and nothing else: the engine declares its
+    budgets into the ambient guard at construction (burst ladder =
+    bit_length(decode_burst)) and self-checks after every step — a full
+    mixed trace must drain without tripping it."""
+    monkeypatch.setenv(compile_guard.ENV_FLAG, "1")
+    compile_guard.reset_global()
+    try:
+        cfg, lm, merged = served
+        eng = ContinuousEngine(lm, merged, n_slots=2, max_len=16,
+                               prefill_chunk=4, decode_burst=8)
+        g = compile_guard.current()
+        counts = g.counts()
+        assert counts["engine._JIT_STEP"][1] == 4
+        assert counts["engine._JIT_RESET"][1] == 2
+        assert counts["engine._JIT_BURST"][1] == 4  # k in {1, 2, 4, 8}
+        trace = make_trace(4, cfg.vocab, seed=5, prompt_lens=(2, 6),
+                           gen_lens=(2, 7))
+        for r in trace:
+            eng.submit(r.prompt, r.max_new_tokens, r.eos_id, rid=r.rid)
+        out = eng.run()  # every step_once ran guard.check()
+        assert sorted(out) == [r.rid for r in trace]
+        g.check()
+    finally:
+        compile_guard.reset_global()
+
+
+def test_second_engine_accumulates_budget_on_shared_jits(served):
+    cfg, lm, merged = served
+    with CompileGuard("two-engines") as g:
+        ContinuousEngine(lm, merged, n_slots=2, max_len=16, decode_burst=4)
+        ContinuousEngine(lm, merged, n_slots=2, max_len=16, decode_burst=4)
+        assert g.counts()["engine._JIT_BURST"][1] == 6  # 3 + 3
+        assert g.counts()["engine._JIT_RESET"][1] == 4  # 2 + 2
+
+
+def test_encdec_encoder_bucket_budget_formula():
+    """bit_length(max_src) pow2 buckets, +1 when the cap itself is not a
+    power of two (the capped top bucket is an extra program)."""
+    cfg = C.reduced("seamless-m4t-medium")
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+    with CompileGuard("enc-pow2") as g:
+        ContinuousEngine(lm, merged, n_slots=1, max_len=8, max_src=8)
+        assert g.counts()["engine._JIT_ENCODE"][1] == 4  # {1, 2, 4, 8}
+    with CompileGuard("enc-capped") as g:
+        ContinuousEngine(lm, merged, n_slots=1, max_len=8, max_src=12)
+        # {1, 2, 4, 8} + the capped 12 bucket
+        assert g.counts()["engine._JIT_ENCODE"][1] == 5

@@ -9,8 +9,6 @@ import repro.configs as C
 from repro.models import LM
 from repro.models.common import QuantPolicy
 from repro.core import convert_tree
-from repro.configs.base import ShapeCell
-from repro.configs.shapes import batch_specs
 
 
 def _fp_model():
@@ -50,12 +48,12 @@ def test_convert_skips_routers_and_vectors():
                       dtype=jnp.float32)
     out = convert_tree(p, pol)
     assert "w" in out["moe"]["router"]          # router stays fp
-    assert "q" in out["moe"]["gate"]            # experts quantized (stacked)
+    assert out["moe"]["gate"].scheme == "qalora"  # experts quantized (stacked)
     assert out["moe"]["gate"]["q"].qweight.ndim == 3  # [E, Kp, N]
 
 
 def test_convert_stacked_quantization_matches_per_layer():
-    from repro.core import quantize, dequantize
+    from repro.core import quantize
     w = jax.random.normal(jax.random.PRNGKey(0), (3, 32, 16))
     pol = QuantPolicy(mode="qalora", bits=4, group_size=16, rank=2,
                       dtype=jnp.float32)

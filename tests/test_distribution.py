@@ -1,12 +1,10 @@
 """Multi-device distribution tests, run in a subprocess with a forced
 8-device CPU platform (the main test process must keep 1 device)."""
 
-import json
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def _run(src: str) -> str:

@@ -3,11 +3,10 @@ recording utilities."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.perf.hlo_analysis import analyze_hlo_text
-from repro.perf.roofline import roofline_terms, HW, model_flops, active_params
+from repro.perf.roofline import roofline_terms, HW, active_params
 from repro.models.scan_utils import cscan, cmap, recording
 
 

@@ -162,36 +162,33 @@ def test_src_rejected_for_non_encdec_family():
 # ---------------------------------------------------------------------------
 
 
-def test_encode_compiles_are_bucketed_to_pow2_lengths(served_encdec,
-                                                      monkeypatch):
+def test_encode_compiles_are_bucketed_to_pow2_lengths(served_encdec):
     """Live traffic carries arbitrary src lengths; without bucketing,
-    each distinct length would compile its own encoder program.  Pin the
-    contract: every `_JIT_ENCODE` call sees a src padded to a power-of-
-    two bucket, so 7 distinct request lengths dispatch at most
-    O(log max_src) distinct encoder shapes — and the true length rides
-    in as a traced mask, not a compile key."""
-    import repro.serving.engine as engine_mod
+    each distinct length would compile its own encoder program.  The pin
+    (migrated from a `_JIT_ENCODE` monkeypatch spy to a CompileGuard
+    budget): the engine declares bit_length(max_src) encoder programs,
+    and 16 distinct request lengths must compile only the pow2 buckets
+    {1, 2, 4, 8, 16} — the true length rides in as a traced mask, not a
+    compile key.  An unbucketed encoder (one program per length) blows
+    the budget and raises CompileBudgetExceeded on the very step that
+    over-compiled, via the engine's own per-step guard.check()."""
+    from repro.runtime.compile_guard import CompileGuard
     cfg, lm, merged = served_encdec
-    seen = []
-    real = engine_mod._JIT_ENCODE
-
-    def spy(lm_, params, src, src_len):
-        seen.append((int(src.shape[1]), int(np.asarray(src_len)[0])))
-        return real(lm_, params, src, src_len)
-
-    monkeypatch.setattr(engine_mod, "_JIT_ENCODE", spy)
-    eng = ContinuousEngine(lm, merged, n_slots=2, max_len=12,
-                           prefill_chunk=4, decode_burst=2, max_src=MAX_SRC)
-    for ss in range(1, MAX_SRC):  # 7 distinct true lengths
-        eng.submit(np.arange(4, 7, dtype=np.int32), 2, rid=ss,
-                   src=_src(cfg, ss, 40 + ss))
-    out = eng.run()
-    assert len(out) == MAX_SRC - 1 and len(seen) == MAX_SRC - 1
-    for padded, true in seen:
-        assert padded & (padded - 1) == 0, f"non-pow2 bucket {padded}"
-        assert true <= padded <= MAX_SRC
-    buckets = {padded for padded, _ in seen}
-    assert len(buckets) <= MAX_SRC.bit_length(), buckets  # O(log max_src)
+    with CompileGuard("encdec-pin") as g:
+        # max_src=16 (not the module-wide 8) so the top bucket's encoder
+        # shape is fresh in this process: the guard must observe >= 1
+        # real compile, not just an already-warm cache
+        eng = ContinuousEngine(lm, merged, n_slots=2, max_len=12,
+                               prefill_chunk=4, decode_burst=2, max_src=16)
+        for ss in range(1, 17):  # 16 distinct true lengths
+            eng.submit(np.arange(4, 7, dtype=np.int32), 2, rid=ss,
+                       src=_src(cfg, ss, 40 + ss))
+        out = eng.run()
+        assert len(out) == 16
+        g.check()
+        count, budget = g.counts()["engine._JIT_ENCODE"]
+        assert budget == 5, budget  # O(log max_src): {1, 2, 4, 8, 16}
+        assert 1 <= count <= budget, (count, budget)
 
 
 @pytest.mark.slow

@@ -112,6 +112,34 @@ def test_engine_decode_burst_clamped_to_power_of_two(served):
         assert eng.decode_burst == want, (asked, want)
 
 
+def test_burst_ladder_compiles_within_guard_budget(served):
+    """The O(log decode_burst) compile invariant, ENFORCED: under a
+    CompileGuard the engine declares bit_length(decode_burst) scan
+    programs for `_JIT_BURST`, and a mixed-length trace whose shortest-
+    request-driven burst lengths walk the k in {1, 2, 4, 8} ladder must
+    stay within that budget (the engine's own per-step guard.check()
+    raises CompileBudgetExceeded the moment an off-ladder k compiles)."""
+    from repro.runtime.compile_guard import CompileGuard
+    cfg, lm, merged = served
+    trace = make_trace(6, cfg.vocab, seed=23, prompt_lens=(2, 5),
+                       gen_lens=(1, 3, 6, 9))
+    with CompileGuard("burst-pin") as g:
+        # max_len=18 is unique to this test so the burst programs'
+        # cache shapes are fresh in this process: the guard must see
+        # >= 1 real compile, not an already-warm cache
+        eng = ContinuousEngine(lm, merged, n_slots=3, max_len=18,
+                               prefill_chunk=4, decode_burst=8)
+        for r in trace:
+            eng.submit(r.prompt, r.max_new_tokens, r.eos_id, rid=r.rid)
+        out = eng.run()
+        assert sorted(len(v) for v in out.values()) == sorted(
+            r.max_new_tokens for r in trace)
+        g.check()
+        count, budget = g.counts()["engine._JIT_BURST"]
+        assert budget == 4, budget  # k ladder {1, 2, 4, 8}
+        assert 1 <= count <= budget, (count, budget)
+
+
 def test_engine_occupancy_pinned_on_hand_computed_trace(served):
     """EngineStats counts slot/busy steps in MODEL-STEP units on both the
     ragged and burst paths.  Hand trace: slots=2, prefill_chunk=4,

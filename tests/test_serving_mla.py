@@ -156,25 +156,32 @@ def test_mla_stale_cache_beyond_qpos_never_leaks():
 # ---------------------------------------------------------------------------
 
 
-def test_absorbed_dequant_stays_out_of_step_graph(served_mla, monkeypatch):
+def test_absorbed_dequant_stays_out_of_step_graph(served_mla):
     """With aux threaded, the per-step graph never touches _kv_up_split
-    (the engine computes the effective W_uk/W_uv once at construction)."""
+    (the engine computes the effective W_uk/W_uv once at construction).
+    Migrated from a monkeypatch-raise pin to a CompileGuard wrap_counter
+    with budget 0: the guard counts calls instead of exploding inside
+    the traced graph, and restores the real function on exit."""
     import repro.models.attention as A
+    from repro.runtime.compile_guard import (CompileBudgetExceeded,
+                                             CompileGuard)
     cfg, lm, merged = served_mla
     aux = lm.absorbed_weights(merged)
     assert aux is not None and aux["dense"][0].shape[0] == cfg.n_layers
-
-    def boom(*a, **k):
-        raise AssertionError("absorbed-weight dequant ran in the step path")
-
-    monkeypatch.setattr(A, "_kv_up_split", boom)
     cache = lm.init_cache(2, 8, jnp.float32)
     toks = jnp.asarray(np.full((2, 1), 5, np.int32))
     ones = jnp.ones((2,), jnp.int32)
-    logits, _ = lm.step_ragged(merged, cache, toks, ones, aux=aux)  # no raise
-    assert np.isfinite(np.asarray(logits)).all()
-    with pytest.raises(AssertionError, match="dequant ran"):
+    with CompileGuard("mla-pin") as g:
+        g.wrap_counter(A, "_kv_up_split", budget=0)
+        logits, _ = lm.step_ragged(merged, cache, toks, ones, aux=aux)
+        g.check()  # aux threaded: ZERO dequant calls on the step path
+        assert np.isfinite(np.asarray(logits)).all()
         lm.step_ragged(merged, cache, toks, ones)  # aux=None re-dequantizes
+        assert g.count("repro.models.attention._kv_up_split") >= 1
+        with pytest.raises(CompileBudgetExceeded, match="_kv_up_split"):
+            g.check()
+    # guard exit restored the real function (no counting wrapper left)
+    assert not hasattr(A._kv_up_split, "__wrapped__")
 
 
 # ---------------------------------------------------------------------------

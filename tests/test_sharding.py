@@ -6,14 +6,13 @@ while exercising the production 16x16 and 2x16x16 topologies.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 import repro.configs as C
 from repro.models import LM
 from repro.sharding import param_specs, batch_spec_tree, cache_spec_tree
-from repro.sharding.rules import spec_for_param, _pick
+from repro.sharding.rules import _pick
 
 def _abstract_mesh(sizes, names):
     """AbstractMesh across jax versions: old API took (sizes, names),

@@ -4,7 +4,6 @@ recurrences, plus decode-step vs full-sequence consistency."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.ssm import (Mamba2Config, RWKV6Config, _ssd_chunk, _wkv_chunk,
                               mamba2_init, mamba2_mix, mamba2_decode,

@@ -7,11 +7,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import make_stream, DataConfig, InstructionStream
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, split_params,
-                         merge_params, trainable_mask, clip_by_global_norm,
+                         merge_params, clip_by_global_norm,
                          int8_compress, int8_decompress)
 from repro.checkpoint import CheckpointManager, save_pytree, load_pytree
 from repro.runtime import (StragglerDetector, Heartbeat, PreemptionGuard,

@@ -5,12 +5,10 @@ fine-tune on the instruction stream (loss drops) -> merge (still INT4) ->
 served model == fine-tuned model.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as C
 from repro.models import LM

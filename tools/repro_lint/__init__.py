@@ -1,0 +1,41 @@
+"""repro-lint: repo-invariant static analyzer for the QA-LoRA serving stack.
+
+The serving stack's correctness rests on invariants that used to be
+enforced only by convention (grep promises in docstrings, scattered
+per-test monkeypatches, informal lock discipline).  ``repro-lint``
+mechanizes them as AST rules:
+
+=======  ==================================================================
+RL001    host purity: declared pure-host modules (``serving/scheduler.py``,
+         ``serving/paging.py``, ``serving/trace.py``) must not import
+         ``jax`` — they are unit-testable without tracing a model, and a
+         stray device dependency there silently couples scheduling to
+         compilation.
+RL002    no params key-sniffing: string-key probing of linear-param dicts
+         (``"q" in p``, ``p.data["ad"]``) is the pre-PR-2 dispatch style;
+         outside the scheme registry (``core/schemes.py``, the single
+         owner of storage layouts) it reintroduces silent cross-scheme
+         breakage.  This rule IS the PR 2 grep promise, machine-checked.
+RL003    compile discipline: ``jax.jit`` only at module level (the
+         engine's ``_JIT_*`` pattern) — a per-instance/per-call jit gets a
+         fresh trace cache every call and is a retrace bug by
+         construction; ``pl.pallas_call`` only inside ``repro/kernels/``.
+RL004    no Python control flow on traced values: in functions reachable
+         from module-level-jitted step code, ``if``/``while``/``assert``
+         on traced data — or ``bool()/int()/float()/.item()`` coercions of
+         it — either fail at trace time or silently bake one trace's value
+         into every later call.
+RL005    frontend lock discipline: the declared cross-thread state of
+         ``ServingFrontend`` may only be mutated under ``self._lock``.
+RL006    deterministic serving: no ambient wall clock or unseeded
+         randomness in modules that promise deterministic recovery —
+         clocks are injectable parameters, rngs take explicit seeds.
+=======  ==================================================================
+
+Run as ``python -m tools.repro_lint src tests`` (or ``make analyze``).
+Per-file waivers live in :mod:`tools.repro_lint.config` and MUST carry a
+justification string; stale waivers (matching no violation) fail the run
+so the waiver list can only shrink.
+"""
+
+from .core import analyze, main  # noqa: F401

@@ -1,0 +1,141 @@
+"""Runner: collect files, run rules, apply + validate waivers, report.
+
+Exit codes: 0 clean (waived violations allowed), 1 violations, 2 config
+error (empty-reason or stale waiver — the waiver list may only shrink).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import Dict, Iterable, List, Tuple
+
+from . import config as default_config
+from .rules import ALL_RULES, RULE_DOCS, Violation
+
+
+def collect_files(paths: Iterable[str], root: str = ".") -> List[str]:
+    """Repo-relative posix paths of every .py file under ``paths``."""
+    out = []
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full) and p.endswith(".py"):
+            out.append(p.replace(os.sep, "/"))
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    rel = os.path.relpath(os.path.join(dirpath, f), root)
+                    out.append(rel.replace(os.sep, "/"))
+    return sorted(set(out))
+
+
+def parse_project(files: Iterable[str],
+                  root: str = ".") -> Dict[str, ast.Module]:
+    project = {}
+    for rel in files:
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as f:
+            src = f.read()
+        # syntax errors are ruff/E9's job; here they'd mask every rule,
+        # so fail loudly rather than skipping the file
+        project[rel] = ast.parse(src, filename=rel)
+    return project
+
+
+def _validate_waivers(waivers) -> List[str]:
+    errors = []
+    seen = set()
+    for w in waivers:
+        missing = {"rule", "path", "reason"} - set(w)
+        if missing:
+            errors.append(f"waiver {w!r}: missing fields {sorted(missing)}")
+            continue
+        if not str(w["reason"]).strip():
+            errors.append(f"waiver ({w['rule']}, {w['path']}): empty "
+                          f"justification — every waiver must say WHY the "
+                          f"violation is acceptable")
+        if w["rule"] not in ALL_RULES:
+            errors.append(f"waiver ({w['rule']}, {w['path']}): unknown rule")
+        key = (w["rule"], w["path"])
+        if key in seen:
+            errors.append(f"duplicate waiver {key}")
+        seen.add(key)
+    return errors
+
+
+def analyze(paths: Iterable[str], *, root: str = ".", config=None,
+            waivers=None) -> Tuple[List[Violation], List[str]]:
+    """Run every rule over ``paths``; returns (violations, config_errors).
+
+    Violations matching a waiver come back with ``waived=True`` (and the
+    justification attached) rather than dropped, so reports can show what
+    is being tolerated and the runner can detect stale waivers."""
+    cfg = default_config.CONFIG if config is None else config
+    wvs = default_config.WAIVERS if waivers is None else waivers
+    errors = _validate_waivers(wvs)
+    project = parse_project(collect_files(paths, root), root)
+    violations: List[Violation] = []
+    for rule_fn in ALL_RULES.values():
+        violations.extend(rule_fn(project, cfg))
+    by_key = {(w["rule"], w["path"]): w for w in wvs
+              if {"rule", "path", "reason"} <= set(w)}
+    used = set()
+    for v in violations:
+        w = by_key.get((v.rule, v.path))
+        if w is not None and str(w["reason"]).strip():
+            v.waived = True
+            v.waiver_reason = str(w["reason"])
+            used.add((v.rule, v.path))
+    for key in by_key:
+        if key not in used:
+            errors.append(
+                f"stale waiver {key}: suppresses nothing — delete it (the "
+                f"waiver list may only shrink)")
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return violations, errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="repo-invariant static analyzer (see tools/repro_lint/"
+                    "__init__.py for the rule catalogue)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to analyze (default: src tests)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--no-waivers", action="store_true",
+                    help="report waived violations as failures too")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULE_DOCS):
+            print(f"{rid}  {RULE_DOCS[rid]}")
+        return 0
+
+    violations, errors = analyze(args.paths or ["src", "tests"])
+    hard = [v for v in violations
+            if not v.waived or args.no_waivers]
+    waived = [v for v in violations if v.waived]
+    for v in violations:
+        print(v.render())
+    if waived and not args.no_waivers:
+        print(f"# {len(waived)} waived violation(s); justifications in "
+              f"tools/repro_lint/config.py")
+    for e in errors:
+        print(f"config error: {e}", file=sys.stderr)
+    if errors:
+        return 2
+    if hard:
+        print(f"# FAILED: {len(hard)} violation(s)", file=sys.stderr)
+        return 1
+    print(f"# repro-lint clean ({len(violations)} finding(s), "
+          f"{len(waived)} waived)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

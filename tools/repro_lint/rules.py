@@ -1,0 +1,868 @@
+"""AST rule implementations for repro-lint.
+
+Every rule is a function ``rule(project, config) -> list[Violation]``
+registered in ``ALL_RULES``.  ``project`` maps repo-relative posix paths
+to parsed ``ast.Module`` trees (see :mod:`tools.repro_lint.core`).
+
+The rules are deliberately repo-specific: they encode THIS codebase's
+conventions (the ``_JIT_*`` module-level-jit pattern, the scheme
+registry's ownership of storage keys, the frontend's lock contract) —
+generic linting stays in ruff.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+
+@dataclasses.dataclass
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    waiver_reason: str = ""
+
+    def render(self) -> str:
+        tag = " (waived)" if self.waived else ""
+        return (f"{self.path}:{self.line}:{self.col + 1} "
+                f"{self.rule}{tag} {self.message}")
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute/Name chains; None for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+# ---------------------------------------------------------------------------
+# RL001 — host purity
+# ---------------------------------------------------------------------------
+
+
+def rl001_host_purity(project, config) -> List[Violation]:
+    cfg = config["RL001"]
+    out = []
+    for path in cfg["pure_host_modules"]:
+        tree = project.get(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            roots = []
+            if isinstance(node, ast.Import):
+                roots = [(a.name.split(".")[0], a.name) for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                roots = [(node.module.split(".")[0], node.module)]
+            for root, full in roots:
+                if root in cfg["forbidden_roots"]:
+                    out.append(Violation(
+                        "RL001", path, node.lineno, node.col_offset,
+                        f"pure-host module imports {full!r}: scheduling/"
+                        f"paging/trace bookkeeping must stay unit-testable "
+                        f"without a device runtime"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL002 — no params key-sniffing outside the scheme registry
+# ---------------------------------------------------------------------------
+
+
+def rl002_key_sniffing(project, config) -> List[Violation]:
+    cfg = config["RL002"]
+    out = []
+    for path, tree in project.items():
+        if path == cfg["owner"]:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Compare):
+                key = _const_str(node.left)
+                if (key in cfg["sniff_keys"]
+                        and any(isinstance(op, (ast.In, ast.NotIn))
+                                for op in node.ops)):
+                    out.append(Violation(
+                        "RL002", path, node.lineno, node.col_offset,
+                        f'key-sniffing membership test `"{key}" in ...`: '
+                        f"use p.scheme / schemes.dense_view / "
+                        f"scheme.trainable_paths — storage keys belong to "
+                        f"core/schemes.py"))
+            elif isinstance(node, ast.Subscript):
+                key = _const_str(node.slice)
+                if (key in cfg["data_subscript_keys"]
+                        and isinstance(node.value, ast.Attribute)
+                        and node.value.attr == "data"):
+                    out.append(Violation(
+                        "RL002", path, node.lineno, node.col_offset,
+                        f'raw LinearParams payload access `.data["{key}"]`: '
+                        f"go through the scheme API (quantized_base / "
+                        f"adapter_params / trainable_paths / dense_view) "
+                        f"instead of assuming the storage layout"))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "get"
+                  and isinstance(node.func.value, ast.Attribute)
+                  and node.func.value.attr == "data"
+                  and node.args
+                  and _const_str(node.args[0])
+                  in cfg["data_subscript_keys"]):
+                key = _const_str(node.args[0])
+                out.append(Violation(
+                    "RL002", path, node.lineno, node.col_offset,
+                    f'raw LinearParams payload probe `.data.get("{key}")`: '
+                    f"go through the scheme API (quantized_base / "
+                    f"adapter_params / trainable_paths / dense_view) "
+                    f"instead of assuming the storage layout"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL003 — jax.jit only at module level; pallas_call only in kernels/
+# ---------------------------------------------------------------------------
+
+
+class _JitScopeVisitor(ast.NodeVisitor):
+    def __init__(self, path: str, in_kernels: bool):
+        self.path = path
+        self.in_kernels = in_kernels
+        self.depth = 0          # function nesting depth
+        self.out: List[Violation] = []
+
+    def _visit_function(self, node):
+        # decorators evaluate in the ENCLOSING scope: @jax.jit on a
+        # module-level def is the blessed shape, not a violation
+        for d in node.decorator_list:
+            self.visit(d)
+        self.depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        for field in (node.args.defaults, node.args.kw_defaults):
+            for dflt in field:
+                if dflt is not None:
+                    self.visit(dflt)
+        self.depth -= 1
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_function
+
+    def visit_Attribute(self, node):
+        name = dotted(node)
+        if name == "jax.jit" and self.depth > 0:
+            self.out.append(Violation(
+                "RL003", self.path, node.lineno, node.col_offset,
+                "jax.jit inside a function body: per-call jit gets a fresh "
+                "trace cache every call (retrace bug by construction) — "
+                "hoist to a module-level _JIT_* binding keyed on hashable "
+                "static args"))
+        elif (name is not None and name.endswith(".pallas_call")
+              and not self.in_kernels):
+            self.out.append(Violation(
+                "RL003", self.path, node.lineno, node.col_offset,
+                "pl.pallas_call outside repro/kernels/: raw kernels live in "
+                "the kernels layer behind the ops wrappers (padding, "
+                "autotuned blocks, dispatch thresholds)"))
+        self.generic_visit(node)
+
+
+def rl003_module_level_jit(project, config) -> List[Violation]:
+    cfg = config["RL003"]
+    out = []
+    for path, tree in project.items():
+        if not path.startswith(tuple(cfg["paths"])):
+            continue
+        v = _JitScopeVisitor(path, path.startswith(cfg["kernel_prefix"]))
+        v.visit(tree)
+        out.extend(v.out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL004 — no Python control flow / coercion on traced values in jit-reachable
+# code
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _FnInfo:
+    path: str
+    node: ast.AST                      # FunctionDef | AsyncFunctionDef
+    static_extra: Set[str] = dataclasses.field(default_factory=set)
+    # union of names (params + captured closure vars) observed tainted
+    # across every call path reaching this function
+    tainted_in: Set[str] = dataclasses.field(default_factory=set)
+    # inferred taint of the return value: None = not yet analyzed
+    # (callers assume tainted-if-any-arg-tainted); bool, or a per-element
+    # list for tuple returns (`return x2, lead, m, bm` -> [T, F, F, F])
+    ret: object = None
+
+
+def _scope_walk(fn_node):
+    """ast.walk restricted to one function's own scope: does not descend
+    into nested def bodies (they are analyzed separately, with the taint
+    that actually reaches them)."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _param_names(node) -> List[str]:
+    a = node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _jit_static_params(call: ast.Call, fn_node) -> Set[str]:
+    """Param names a ``jax.jit(fn, static_argnums=..., static_argnames=...)``
+    call pins static (best-effort on constant arguments)."""
+    static: Set[str] = set()
+    pos = _param_names(fn_node) if fn_node is not None else []
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            idxs = []
+            if isinstance(kw.value, ast.Constant):
+                idxs = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                idxs = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)]
+            for i in idxs:
+                if isinstance(i, int) and 0 <= i < len(pos):
+                    static.add(pos[i])
+        elif kw.arg == "static_argnames":
+            vals = [kw.value] if isinstance(kw.value, ast.Constant) else (
+                list(kw.value.elts)
+                if isinstance(kw.value, (ast.Tuple, ast.List)) else [])
+            for e in vals:
+                s = _const_str(e)
+                if s:
+                    static.add(s)
+    return static
+
+
+class _TaintChecker:
+    """Intra-function taint pass: ``tainted_init`` names (params/closure
+    vars that actually received traced values at some call site) are
+    traced; Python control flow or host coercion on a traced value is a
+    violation."""
+
+    def __init__(self, path, fn_node, tainted_init, static_attrs,
+                 static_calls, resolver=None):
+        self.path = path
+        self.fn = fn_node
+        self.static_attrs = static_attrs
+        self.static_calls = static_calls
+        # resolver(call) -> None (unknown callee) | bool | list[bool]:
+        # the inferred return taint of a repo-local callee, letting e.g.
+        # shape-metadata helpers (`_dispatch(x)`) return untainted values
+        # even when fed traced arrays
+        self.resolver = resolver
+        self.tainted: Set[str] = set(tainted_init)
+        self.out: List[Violation] = []
+
+    # -- taint of an expression ------------------------------------------
+
+    def t(self, node) -> bool:
+        if node is None or isinstance(node, (ast.Constant, ast.Lambda,
+                                             ast.JoinedStr)):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in self.static_attrs:
+                return False
+            return self.t(node.value)
+        if isinstance(node, ast.Subscript):
+            if (isinstance(node.value, ast.Attribute)
+                    and node.value.attr in self.static_attrs):
+                return False
+            return self.t(node.value) or self.t(node.slice)
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in self.static_calls):
+                return False
+            if self.resolver is not None:
+                r = self.resolver(node)
+                if r is not None:
+                    return any(r) if isinstance(r, list) else bool(r)
+            parts = [self.t(a) for a in node.args]
+            parts += [self.t(k.value) for k in node.keywords]
+            if isinstance(node.func, ast.Attribute):
+                parts.append(self.t(node.func.value))
+            return any(parts)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            # `"key" in p` probes pytree/dict STRUCTURE, which is static
+            # under jit even when the leaves are tracers
+            if (_const_str(node.left) is not None
+                    and all(isinstance(op, (ast.In, ast.NotIn))
+                            for op in node.ops)):
+                return False
+            return self.t(node.left) or any(self.t(c)
+                                            for c in node.comparators)
+        if isinstance(node, (ast.BoolOp,)):
+            return any(self.t(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.t(node.left) or self.t(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.t(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.t(node.test) or self.t(node.body) or self.t(
+                node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.t(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(self.t(v) for v in node.values if v is not None)
+        if isinstance(node, ast.Starred):
+            return self.t(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.t(node.value)
+        if isinstance(node, ast.Slice):
+            return any(self.t(x) for x in (node.lower, node.upper, node.step))
+        return False
+
+    # -- fixpoint over assignments ---------------------------------------
+
+    def _names_of_target(self, tgt) -> List[str]:
+        if isinstance(tgt, ast.Name):
+            return [tgt.id]
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            out = []
+            for e in tgt.elts:
+                out.extend(self._names_of_target(e))
+            return out
+        if isinstance(tgt, ast.Starred):
+            return self._names_of_target(tgt.value)
+        return []
+
+    def _assign_taint(self, tgt, value):
+        """Taint assignment targets; tuple-unpacks of a call with known
+        per-element return taint flow element-wise (`x2, lead, m, bm =
+        _flatten_pad(x)` taints only x2)."""
+        if (isinstance(value, ast.Call) and self.resolver is not None
+                and isinstance(tgt, (ast.Tuple, ast.List))
+                and not any(isinstance(e, ast.Starred) for e in tgt.elts)):
+            r = self.resolver(value)
+            if isinstance(r, list) and len(r) == len(tgt.elts):
+                for elt, ti in zip(tgt.elts, r):
+                    if ti:
+                        self.tainted.update(self._names_of_target(elt))
+                return
+        if self.t(value):
+            self.tainted.update(self._names_of_target(tgt))
+
+    def propagate(self):
+        for _ in range(4):   # small fixpoint: nested reassignment chains
+            before = len(self.tainted)
+            for node in _scope_walk(self.fn):
+                if isinstance(node, ast.Assign):
+                    for tgt in node.targets:
+                        self._assign_taint(tgt, node.value)
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    if node.value is not None and self.t(node.value):
+                        self.tainted.update(self._names_of_target(node.target))
+                elif isinstance(node, ast.For) and self.t(node.iter):
+                    # iterating a traced dict yields its KEYS — static
+                    # pytree structure; .items() values still trace
+                    it = node.iter
+                    attr = (it.func.attr
+                            if isinstance(it, ast.Call)
+                            and isinstance(it.func, ast.Attribute)
+                            else None)
+                    if attr == "keys":
+                        pass
+                    elif (attr == "items"
+                          and isinstance(node.target, ast.Tuple)
+                          and len(node.target.elts) == 2):
+                        self.tainted.update(
+                            self._names_of_target(node.target.elts[1]))
+                    else:
+                        self.tainted.update(
+                            self._names_of_target(node.target))
+                elif isinstance(node, ast.NamedExpr) and self.t(node.value):
+                    self.tainted.add(node.target.id)
+            if len(self.tainted) == before:
+                break
+
+    # -- violations -------------------------------------------------------
+
+    def check(self) -> List[Violation]:
+        self.propagate()
+        fname = self.fn.name
+        for node in _scope_walk(self.fn):
+            if isinstance(node, (ast.If, ast.While)) and self.t(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                self._flag(node, f"Python `{kind}` on a traced value in "
+                                 f"jit-reachable `{fname}` — use jnp.where/"
+                                 f"lax.cond (or hoist the decision to the "
+                                 f"host before dispatch)")
+            elif isinstance(node, ast.Assert) and self.t(node.test):
+                self._flag(node, f"assert on a traced value in jit-reachable "
+                                 f"`{fname}` — trace-time asserts see "
+                                 f"tracers, not data; use checkify or a "
+                                 f"host-side check")
+            elif isinstance(node, ast.IfExp) and self.t(node.test):
+                self._flag(node, f"ternary on a traced value in "
+                                 f"jit-reachable `{fname}` — use jnp.where")
+            elif isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in ("bool", "int", "float")
+                        and len(node.args) == 1 and self.t(node.args[0])):
+                    self._flag(node, f"{node.func.id}() coercion of a traced "
+                                     f"value in jit-reachable `{fname}` — "
+                                     f"forces a host sync / trace error")
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in ("item", "tolist")
+                      and self.t(node.func.value)):
+                    self._flag(node, f".{node.func.attr}() on a traced value "
+                                     f"in jit-reachable `{fname}` — forces a "
+                                     f"host sync / trace error")
+        return self.out
+
+    def _flag(self, node, msg):
+        self.out.append(Violation("RL004", self.path, node.lineno,
+                                  node.col_offset, msg))
+
+    def ret_taint(self):
+        """Taint of this function's return value (call after check()):
+        bool, or a per-element list when every return is a same-arity
+        tuple."""
+        rets = []
+        for node in _scope_walk(self.fn):
+            if isinstance(node, ast.Return):
+                if isinstance(node.value, ast.Tuple):
+                    rets.append([self.t(e) for e in node.value.elts])
+                else:
+                    rets.append(self.t(node.value))
+        if not rets:
+            return False
+        if (all(isinstance(r, list) for r in rets)
+                and len({len(r) for r in rets}) == 1):
+            return [any(col) for col in zip(*rets)]
+        return any(any(r) if isinstance(r, list) else r for r in rets)
+
+
+# method names shared with builtin containers (`env.get`, `s.split`,
+# `xs.append`): an attribute call with one of these must NOT resolve to a
+# same-named repo def — `os.environ.get(...)` is not AdapterStore.get —
+# so taint falls back to receiver/argument propagation
+_AMBIENT_METHODS = frozenset(
+    n for t in (dict, list, set, str, tuple, bytes, frozenset)
+    for n in dir(t) if not n.startswith("_"))
+
+# transform-style higher-order calls whose function-valued arguments run
+# under trace whenever the call sees traced operands (scan carries, cond
+# operands, mapped trees, ...)
+_HOFS = {"scan", "while_loop", "fori_loop", "cond", "switch", "vmap",
+         "pmap", "checkpoint", "remat", "map", "tree_map", "shard_map",
+         "grad", "value_and_grad", "vjp", "jvp", "linearize", "custom_vjp",
+         "associative_scan"}
+
+
+def _call_arg_taint(call: ast.Call, chk: "_TaintChecker",
+                    cand_node, is_attr_call: bool) -> Set[str]:
+    """Which of ``cand_node``'s parameters receive a tainted value from
+    this call site (best-effort positional/keyword mapping; a tainted
+    *args/**kwargs expansion conservatively taints everything)."""
+    a = cand_node.args
+    pos_params = [p.arg for p in a.posonlyargs + a.args]
+    all_params = set(_param_names(cand_node))
+    offset = 1 if (is_attr_call and pos_params
+                   and pos_params[0] in ("self", "cls")) else 0
+    tainted: Set[str] = set()
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            if chk.t(arg.value):
+                return all_params
+            continue
+        j = i + offset
+        if j < len(pos_params):
+            if chk.t(arg):
+                tainted.add(pos_params[j])
+        elif a.vararg and chk.t(arg):
+            tainted.add(a.vararg.arg)
+    kw_ok = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    for kw in call.keywords:
+        if kw.arg is None:           # **expansion
+            if chk.t(kw.value):
+                return all_params
+            continue
+        if chk.t(kw.value):
+            if kw.arg in kw_ok:
+                tainted.add(kw.arg)
+            elif a.kwarg:
+                tainted.add(a.kwarg.arg)
+    return tainted
+
+
+def rl004_traced_control_flow(project, config) -> List[Violation]:
+    cfg = config["RL004"]
+    scoped = {p: t for p, t in project.items()
+              if p.startswith(tuple(cfg["paths"]))}
+    static_names = set(cfg["static_params"])
+    static_attrs = set(cfg["static_attrs"])
+    static_calls = set(cfg["static_calls"])
+
+    # 1. index every function/method by simple name (nested defs included)
+    index: Dict[str, List[_FnInfo]] = {}
+    for path, tree in scoped.items():
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                index.setdefault(node.name, []).append(_FnInfo(path, node))
+
+    def local_def(path, name) -> Optional[_FnInfo]:
+        for fi in index.get(name, []):
+            if fi.path == path:
+                return fi
+        return None
+
+    work: List[_FnInfo] = []
+    queued: Set[int] = set()
+    roots: Dict[int, _FnInfo] = {}
+
+    def enqueue(fi: _FnInfo):
+        if id(fi.node) not in queued:
+            queued.add(id(fi.node))
+            work.append(fi)
+
+    def seed_root(fi: _FnInfo):
+        roots[id(fi.node)] = fi
+
+    # 2. jit roots: jax.jit(fn, ...) calls + @jax.jit-decorated defs;
+    # their non-static parameters are the original taint sources
+    for path, tree in scoped.items():
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and dotted(node.func) == "jax.jit" and node.args):
+                tgt = node.args[0]
+                cands: List[_FnInfo] = []
+                if isinstance(tgt, ast.Name):
+                    fi = local_def(path, tgt.id)
+                    cands = [fi] if fi else []
+                elif isinstance(tgt, ast.Attribute):
+                    cands = index.get(tgt.attr, [])
+                for fi in cands:
+                    fi.static_extra |= _jit_static_params(node, fi.node)
+                    seed_root(fi)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for d in node.decorator_list:
+                    if dotted(d) == "jax.jit" or (
+                            isinstance(d, ast.Call)
+                            and dotted(d.func) in ("jax.jit",
+                                                   "functools.partial",
+                                                   "partial")
+                            and (dotted(d.func) == "jax.jit"
+                                 or any(dotted(a) == "jax.jit"
+                                        for a in d.args))):
+                        fi = local_def(path, node.name)
+                        if fi is not None:
+                            if isinstance(d, ast.Call):
+                                fi.static_extra |= _jit_static_params(
+                                    d, node)
+                            seed_root(fi)
+
+    # 3. interprocedural fixpoint.  Inner worklist: analyze each function
+    # with the taint that actually reaches it, flowing taint to callees
+    # through call-site arguments (incoming sets only grow -> terminates).
+    # Outer sweeps: each sweep recomputes reachable taint from the jit
+    # roots using the RETURN-taint table of the previous sweep, so
+    # shape-metadata helpers (`_dispatch(x)` returning ints read off
+    # x.shape) stop poisoning their callers; taint only shrinks between
+    # sweeps, so a handful of sweeps converge.
+
+    def _merge_rets(rets):
+        if (all(isinstance(r, list) for r in rets)
+                and len({len(r) for r in rets}) == 1):
+            return [any(col) for col in zip(*rets)]
+        return any(any(r) if isinstance(r, list) else r for r in rets)
+
+    def make_resolver(path):
+        def resolve(call):
+            is_attr = isinstance(call.func, ast.Attribute)
+            cname = (call.func.id if isinstance(call.func, ast.Name)
+                     else call.func.attr if is_attr else None)
+            if cname is None or cname in _HOFS or (
+                    is_attr and cname in _AMBIENT_METHODS):
+                return None
+            cands = index.get(cname, [])
+            same_file = [c for c in cands if c.path == path]
+            if isinstance(call.func, ast.Name) and same_file:
+                cands = same_file
+            if not cands or any(c.ret is None for c in cands):
+                return None
+            return _merge_rets([c.ret for c in cands])
+        return resolve
+
+    results: Dict[int, List[Violation]] = {}
+    for _sweep in range(12):   # breaks early once the ret table is stable
+        for fis in index.values():
+            for f in fis:
+                f.tainted_in = set()
+        results = {}
+        ret_changed = False
+        for fi in roots.values():
+            fi.tainted_in |= {n for n in _param_names(fi.node)
+                              if n not in static_names
+                              and n not in fi.static_extra}
+            enqueue(fi)
+        while work:
+            fi = work.pop()
+            queued.discard(id(fi.node))
+            tainted_init = fi.tainted_in - static_names - fi.static_extra
+            chk = _TaintChecker(fi.path, fi.node, tainted_init,
+                                static_attrs, static_calls,
+                                resolver=make_resolver(fi.path))
+            results[id(fi.node)] = chk.check()
+            new_ret = chk.ret_taint()
+            if new_ret != fi.ret:
+                fi.ret = new_ret
+                ret_changed = True
+
+            def flow_to(cand: _FnInfo, names: Set[str]):
+                new = names - cand.tainted_in
+                if new:
+                    cand.tainted_in |= new
+                    enqueue(cand)
+                elif id(cand.node) not in results:
+                    enqueue(cand)
+
+            for node in _scope_walk(fi.node):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    # closure capture: nested defs see the enclosing
+                    # tainted names (minus their own shadowing params)
+                    nested = None
+                    for cand in index.get(node.name, []):
+                        if cand.node is node:
+                            nested = cand
+                    if nested is not None:
+                        flow_to(nested,
+                                chk.tainted - set(_param_names(node)))
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                is_attr = isinstance(node.func, ast.Attribute)
+                cname = (node.func.id if isinstance(node.func, ast.Name)
+                         else node.func.attr if is_attr else None)
+                if cname is None or (is_attr
+                                     and cname in _AMBIENT_METHODS):
+                    continue
+                if cname in _HOFS:
+                    # fn-valued args trace whenever any operand is traced
+                    hof_hot = any(chk.t(a) for a in node.args) or any(
+                        chk.t(k.value) for k in node.keywords)
+                    if hof_hot:
+                        for arg in node.args:
+                            if isinstance(arg, ast.Name):
+                                body = local_def(fi.path, arg.id)
+                                if body is not None:
+                                    flow_to(body, {
+                                        n for n in _param_names(body.node)
+                                        if n not in static_names})
+                    continue
+                # direct call: map tainted args onto callee params
+                cands = index.get(cname, [])
+                same_file = [c for c in cands if c.path == fi.path]
+                if isinstance(node.func, ast.Name) and same_file:
+                    cands = same_file
+                for cand in cands:
+                    flow_to(cand, _call_arg_taint(node, chk, cand.node,
+                                                  is_attr))
+        if not ret_changed:
+            break
+
+    out: List[Violation] = []
+    for vs in results.values():
+        out.extend(vs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL005 — frontend lock discipline
+# ---------------------------------------------------------------------------
+
+_MUTATORS = ("append", "appendleft", "add", "clear", "remove", "discard",
+             "pop", "popleft", "extend", "update", "insert", "setdefault")
+
+
+class _LockVisitor(ast.NodeVisitor):
+    def __init__(self, path, lock_attr, shared):
+        self.path = path
+        self.lock_attr = lock_attr
+        self.shared = shared
+        self.lock_depth = 0
+        self.fn_stack: List[str] = []
+        self.out: List[Violation] = []
+
+    def _is_lock_ctx(self, expr) -> bool:
+        return dotted(expr) == f"self.{self.lock_attr}"
+
+    def visit_With(self, node):
+        held = any(self._is_lock_ctx(item.context_expr)
+                   for item in node.items)
+        self.lock_depth += held
+        self.generic_visit(node)
+        self.lock_depth -= held
+
+    def _visit_function(self, node):
+        # a fresh function body does NOT inherit the caller's lock: track
+        # per-function, and exempt __init__ (object not yet shared)
+        saved = self.lock_depth
+        self.lock_depth = 0
+        self.fn_stack.append(node.name)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+        self.lock_depth = saved
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_function
+
+    def _self_shared_attr(self, node) -> Optional[str]:
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and node.attr in self.shared):
+            return node.attr
+        return None
+
+    def _flag(self, node, attr, how):
+        if "__init__" in self.fn_stack or not self.fn_stack:
+            return
+        if self.lock_depth == 0:
+            self.out.append(Violation(
+                "RL005", self.path, node.lineno, node.col_offset,
+                f"`self.{attr}` {how} outside `with self.{self.lock_attr}` "
+                f"(declared cross-thread state of the frontend; method "
+                f"`{self.fn_stack[-1]}`)"))
+
+    def visit_Assign(self, node):
+        for tgt in node.targets:
+            attr = self._self_shared_attr(tgt)
+            if attr:
+                self._flag(node, attr, "assigned")
+            if isinstance(tgt, ast.Subscript):
+                attr = self._self_shared_attr(tgt.value)
+                if attr:
+                    self._flag(node, attr, "item-assigned")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        attr = self._self_shared_attr(node.target)
+        if attr:
+            self._flag(node, attr, "aug-assigned")
+        self.generic_visit(node)
+
+    def visit_Delete(self, node):
+        for tgt in node.targets:
+            base = tgt.value if isinstance(tgt, ast.Subscript) else tgt
+            attr = self._self_shared_attr(base)
+            if attr:
+                self._flag(node, attr, "deleted")
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _MUTATORS):
+            attr = self._self_shared_attr(node.func.value)
+            if attr:
+                self._flag(node, attr, f"mutated (.{node.func.attr})")
+        self.generic_visit(node)
+
+
+def rl005_lock_discipline(project, config) -> List[Violation]:
+    out = []
+    for path, fcfg in config["RL005"]["files"].items():
+        tree = project.get(path)
+        if tree is None:
+            continue
+        v = _LockVisitor(path, fcfg["lock_attr"], set(fcfg["shared"]))
+        v.visit(tree)
+        out.extend(v.out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL006 — no ambient wall clock / unseeded randomness in deterministic paths
+# ---------------------------------------------------------------------------
+
+
+def rl006_determinism(project, config) -> List[Violation]:
+    cfg = config["RL006"]
+    out = []
+    for path in cfg["files"]:
+        tree = project.get(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name is None:
+                continue
+            if name in cfg["clock_calls"]:
+                out.append(Violation(
+                    "RL006", path, node.lineno, node.col_offset,
+                    f"ambient clock call {name}() in a deterministic "
+                    f"serving path — take an injectable `clock=` parameter "
+                    f"(the frontend/trace pattern) so replay and recovery "
+                    f"tests stay deterministic"))
+            elif name.split(".")[0] in cfg["random_roots"]:
+                out.append(Violation(
+                    "RL006", path, node.lineno, node.col_offset,
+                    f"global-state randomness {name}() in a deterministic "
+                    f"serving path — use np.random.default_rng(seed)"))
+            elif (name.endswith("random.default_rng")
+                  and not node.args and not node.keywords):
+                out.append(Violation(
+                    "RL006", path, node.lineno, node.col_offset,
+                    "np.random.default_rng() without a seed in a "
+                    "deterministic serving path — pass an explicit seed"))
+            elif ".random." in f".{name}" and name.split(".")[-1] in (
+                    "rand", "randn", "randint", "random", "choice",
+                    "shuffle", "seed", "permutation"):
+                out.append(Violation(
+                    "RL006", path, node.lineno, node.col_offset,
+                    f"legacy global-state numpy randomness {name}() — use "
+                    f"np.random.default_rng(seed)"))
+    return out
+
+
+ALL_RULES = {
+    "RL001": rl001_host_purity,
+    "RL002": rl002_key_sniffing,
+    "RL003": rl003_module_level_jit,
+    "RL004": rl004_traced_control_flow,
+    "RL005": rl005_lock_discipline,
+    "RL006": rl006_determinism,
+}
+
+RULE_DOCS = {
+    "RL001": "host purity: declared pure-host serving modules import no jax",
+    "RL002": 'no params key-sniffing (`"q" in p`, `.data["ad"]`) outside '
+             "core/schemes.py",
+    "RL003": "jax.jit at module level only; pallas_call only in "
+             "repro/kernels/",
+    "RL004": "no Python control flow / host coercion on traced values in "
+             "jit-reachable code",
+    "RL005": "frontend cross-thread state mutated only under self._lock",
+    "RL006": "no ambient clocks / unseeded randomness in deterministic "
+             "serving paths",
+}
