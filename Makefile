@@ -15,9 +15,9 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow" --durations=15
 
-# decode/kernel/engine/paged/adapters/slo micro-bench as a smoke check (writes experiments/bench_results.json)
+# decode/kernel/engine/paged/adapters/slo/spec micro-bench as a smoke check (writes experiments/bench_results.json)
 smoke:
-	$(PY) -m benchmarks.run --only kernels,decode,engine,paged,adapters,slo
+	$(PY) -m benchmarks.run --only kernels,decode,engine,paged,adapters,slo,spec
 
 # static checks (ruff.toml); strict when ruff is installed
 lint:

@@ -16,6 +16,10 @@
   paged   paged KV cache vs contiguous slots on a shared-prefix trace
           (tok/s, prefill rows skipped via prefix reuse, peak cache
           bytes) — token streams asserted identical first
+  spec    speculative decoding: quantized self-drafting + one-step
+          ragged verify — accepted tokens per model step per slot
+          (gated > 1.0 on the intq8 drafter), acceptance rate, and
+          honest wall-clock vs the burst baseline; int2 realism row
   slo     latency-SLO harness: live Poisson/bursty arrivals replayed
           against the async ServingFrontend (threaded intake, bounded
           queue, deadlines), clean AND fault-injected — TTFT/TPOT
@@ -793,6 +797,103 @@ def slo_bench():
                 emit("slo", pre + "recoveries", int(s["recoveries"]), note)
 
 
+def spec_bench():
+    """Speculative decoding: quantized self-drafting + one-step ragged
+    verify vs the non-speculative burst engine on the same mixed trace.
+    The gated headline is ALGORITHMIC — accepted tokens per model step
+    per busy slot, measured over the all-decoding steady phase, must
+    beat 1.0 (a non-speculative engine is exactly 1.0: one token per
+    target step per slot).  tok/s rows are reported honestly: on CPU
+    interpret the drafter's k extra forwards are nearly as expensive as
+    the target's one, so wall-clock speedup needs the memory-bound
+    serving regime the technique targets; the per-step win transfers.
+    An int2 drafter row shows the acceptance/realism tradeoff at the
+    paper's lowest bit width (reported, not gated)."""
+    import repro.configs as C
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.serve import merge_model
+    from repro.models.lm import LM
+    from repro.serving import ContinuousEngine, make_trace
+
+    cfg = C.reduced("gemma3-1b", d_model=128, n_layers=4, d_ff=256,
+                    n_heads=8, n_kv_heads=2)
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+
+    k, slots, prompt_len = 3, 4, 4
+    gens = (24, 8, 16, 12)
+    trace = make_trace(slots, cfg.vocab, seed=0, prompt_lens=(prompt_len,),
+                       gen_lens=gens)
+    useful = sum(r.max_new_tokens for r in trace)
+    max_len = prompt_len + max(gens) + k   # +k: verify headroom
+
+    mesh = make_cpu_mesh()
+    with mesh:
+        def drain(eng):
+            eng.reset()
+            for r in trace:
+                eng.submit(r.prompt, r.max_new_tokens, r.eos_id, rid=r.rid)
+            eng.run()
+            return eng.stats
+
+        def accepted_per_step(eng):
+            # steady-state metric: skip the prefill ramp (mixed
+            # prefill/decode dispatches), measure from the first
+            # all-decoding dispatch to drain.  tokens_out counts
+            # committed tokens, busy_slot_steps counts TARGET rows
+            # consumed (k+1 per slot per spec dispatch), so
+            # d_tok * (k+1) / d_busy = mean tokens committed per verify
+            # step per busy slot — 1.0 is the non-speculative engine
+            eng.reset()
+            for r in trace:
+                eng.submit(r.prompt, r.max_new_tokens, r.eos_id, rid=r.rid)
+            while eng.sched.has_work and not eng.sched.all_decoding:
+                eng.step_once()
+            t0, b0 = eng.stats.tokens_out, eng.stats.busy_slot_steps
+            while eng.sched.has_work:
+                eng.step_once()
+            d_tok = eng.stats.tokens_out - t0
+            d_busy = eng.stats.busy_slot_steps - b0
+            return d_tok * (eng.speculate + 1) / max(d_busy, 1)
+
+        rows = []
+        for name, policy in (("intq8", "*=intq8"), ("int2", "*=int2")):
+            eng = ContinuousEngine(lm, merged, n_slots=slots,
+                                   max_len=max_len,
+                                   prefill_chunk=prompt_len,
+                                   decode_burst=1, speculate=k,
+                                   drafter=policy)
+            drain(eng)                      # warm (compile)
+            st = min((drain(eng) for _ in range(3)),
+                     key=lambda s: s.seconds)
+            rows.append((name, eng, st, accepted_per_step(eng)))
+        burst = ContinuousEngine(lm, merged, n_slots=slots, max_len=max_len,
+                                 prefill_chunk=prompt_len, decode_burst=8)
+        drain(burst)                        # warm (compile)
+        st_b = min((drain(burst) for _ in range(3)),
+                   key=lambda s: s.seconds)
+
+    emit("spec", "burst-baseline-tok_s", round(st_b.tok_per_s, 1),
+         f"non-speculative decode_burst=8 on the same trace "
+         f"({useful} useful tokens, occupancy {st_b.occupancy:.0%})")
+    for name, eng, st, per_step in rows:
+        note = (f"k={k} {name} self-drafter over the shared merged base; "
+                f"{st.accepted_tokens}/{st.proposed_tokens} drafts "
+                f"accepted, {st.dispatches} dispatches")
+        emit("spec", f"{name}-accepted-per-step", round(per_step, 3),
+             f"committed tokens per target model-step per busy slot, "
+             f"all-decoding phase (1.0 = non-speculative); {note}")
+        emit("spec", f"{name}-acceptance-rate",
+             round(st.acceptance_rate, 3), note)
+        emit("spec", f"{name}-tok_s", round(st.tok_per_s, 1),
+             f"wall-clock incl. drafter forwards (CPU interpret; "
+             f"see table note); {note}")
+    headline = rows[0][3]
+    assert headline > 1.0, (
+        f"speculation must beat one token per model step per slot on the "
+        f"intq8 self-draft trace, got {headline:.3f}")
+
+
 def roofline_summary():
     path = "experiments/roofline.json"
     if not os.path.exists(path):
@@ -821,6 +922,7 @@ TABLES = {
     "paged": paged_bench,
     "adapters": adapters_bench,
     "slo": slo_bench,
+    "spec": spec_bench,
     "roofline": roofline_summary,
 }
 

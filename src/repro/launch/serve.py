@@ -193,9 +193,23 @@ def main(argv=None):
                          "min(4, requests))")
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="continuous engine prompt chunk size")
-    ap.add_argument("--decode-burst", type=int, default=8,
+    ap.add_argument("--decode-burst", type=int, default=None,
                     help="continuous engine fused decode steps per dispatch "
-                         "(clamped down to a power of two)")
+                         "(clamped down to a power of two; default 8, "
+                         "forced to 1 under --speculate)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="continuous/frontend: draft this many tokens per "
+                         "slot per decode dispatch and verify them all in "
+                         "ONE ragged step (greedy spec decode — token "
+                         "streams identical to non-speculative greedy). "
+                         "Incompatible with --decode-burst > 1")
+    ap.add_argument("--draft-policy", default="",
+                    help="drafter for --speculate: 'mtp' (mla_moe's "
+                         "multi-token-prediction head, k=1 only) or a "
+                         "PolicyTree spec like '*=intq8' quantizing the "
+                         "merged base into a cheap self-speculation "
+                         "drafter.  Default: mtp when the arch has an MTP "
+                         "head, else '*=intq8'")
     ap.add_argument("--page-size", type=int, default=0,
                     help="continuous/frontend: page the KV cache into "
                          "blocks of this many tokens (0 = contiguous "
@@ -309,7 +323,9 @@ def main(argv=None):
     b = args.requests
     # an empty prompt still needs one token to condition on: feed BOS (=0)
     prompt_len = max(args.prompt_len, 1)
-    max_len = prompt_len + args.gen_len
+    # +speculate: the ragged verify transiently writes up to k rows past
+    # the committed stream (the scheduler demands the same headroom)
+    max_len = prompt_len + args.gen_len + args.speculate
     prompts = np.random.default_rng(0).integers(
         4, cfg.vocab, size=(b, prompt_len)).astype(np.int32)
     if args.prompt_len == 0:
@@ -322,6 +338,21 @@ def main(argv=None):
     if args.page_size and args.engine not in ("continuous", "frontend"):
         ap.error("--page-size needs --engine continuous|frontend (the "
                  "static path has no slot scheduler to drive a page pool)")
+    if args.speculate and args.engine not in ("continuous", "frontend"):
+        ap.error("--speculate needs --engine continuous|frontend (draft "
+                 "+ ragged verify run on the slot scheduler)")
+    if args.speculate and args.decode_burst is not None \
+            and args.decode_burst > 1:
+        ap.error("--speculate is incompatible with --decode-burst > 1: "
+                 "the one-step ragged verify IS the multi-token dispatch; "
+                 "drop --decode-burst (it is forced to 1 when speculating)")
+    decode_burst = (1 if args.speculate
+                    else (8 if args.decode_burst is None
+                          else args.decode_burst))
+    drafter = None
+    if args.speculate:
+        drafter = args.draft_policy or (
+            "mtp" if getattr(cfg, "mtp", False) else "*=intq8")
     paging = dict(page_size=max(args.page_size, 0),
                   n_pages=args.n_pages or None)
     mesh = make_cpu_mesh()
@@ -348,17 +379,22 @@ def main(argv=None):
                     fe = ServingFrontend(
                         lm, merged, n_slots=slots, max_len=max_len,
                         prefill_chunk=args.prefill_chunk,
-                        decode_burst=args.decode_burst,
+                        decode_burst=decode_burst,
                         queue_cap=args.queue_cap,
                         default_deadline_s=ms(args.deadline_ms),
                         default_ttft_deadline_s=ms(args.ttft_deadline_ms),
                         injector=injector, guard=guard, adapters=store,
+                        speculate=args.speculate, drafter=drafter,
                         **paging)
                 except ValueError as e:
                     if args.page_size:
                         ap.error(f"--page-size: {e}")
+                    if args.speculate:
+                        ap.error(f"--speculate: {e}")
                     raise
                 except NotImplementedError as e:
+                    if args.speculate:
+                        ap.error(f"--speculate: {e}")
                     if store is not None:
                         ap.error(f"--adapters with --engine frontend: {e}")
                     ap.error(
@@ -373,9 +409,11 @@ def main(argv=None):
                 counts = fe.run_until_drained()
             s = slo_summary(fe)
             est = fe.engine_stats
+            sp = (f", spec acceptance {est.acceptance_rate:.0%}"
+                  if args.speculate else "")
             print(f"[serve] frontend: {counts} "
                   f"({fe.n_recoveries} recoveries, occupancy "
-                  f"{est.occupancy:.0%}, {est.dispatches} dispatches)")
+                  f"{est.occupancy:.0%}, {est.dispatches} dispatches{sp})")
             print(f"[serve] SLO: ttft p50/p95 "
                   f"{s['ttft_p50_s'] * 1e3:.0f}/{s['ttft_p95_s'] * 1e3:.0f}ms"
                   f", tpot p50 {s['tpot_p50_s'] * 1e3:.1f}ms, goodput "
@@ -405,14 +443,22 @@ def main(argv=None):
                 eng = ContinuousEngine(lm, merged, n_slots=slots,
                                        max_len=max_len,
                                        prefill_chunk=args.prefill_chunk,
-                                       decode_burst=args.decode_burst,
-                                       adapters=store, **paging)
+                                       decode_burst=decode_burst,
+                                       adapters=store,
+                                       speculate=args.speculate,
+                                       drafter=drafter, **paging)
             except ValueError as e:
                 # e.g. rwkv (no CACHE leaves to page) or a degenerate pool
                 if args.page_size:
                     ap.error(f"--page-size: {e}")
+                if args.speculate:
+                    ap.error(f"--speculate: {e}")
                 raise
             except NotImplementedError as e:
+                if args.speculate:
+                    # e.g. mamba_hybrid (no length-addressed rollback) or
+                    # an mtp drafter on an arch without the head
+                    ap.error(f"--speculate: {e}")
                 if store is not None:
                     ap.error(f"--adapters with --engine continuous: {e}")
                 # name the family and point at the docs instead of letting
@@ -430,6 +476,11 @@ def main(argv=None):
             gen = np.asarray([outputs[r] for r in rids], dtype=np.int32)
             mix = (f", {store.n_adapters}+null tenants per-slot"
                    if store is not None else "")
+            if args.speculate:
+                mix += (f", spec k={args.speculate} "
+                        f"({drafter}): {st.accepted_tokens}/"
+                        f"{st.proposed_tokens} drafts accepted "
+                        f"({st.acceptance_rate:.0%})")
             if eng.page_table is not None:
                 pt = eng.page_table
                 mix += (f", paged {pt.page_size}-token pages: "

@@ -671,6 +671,54 @@ class LM:
         the same batch-dependence the static path has between
         whole-prompt prefill and per-token decode.
         """
+        h, layers, n_new = self._ragged_trunk(params, cache, tokens, n_new,
+                                              aux)
+        last = jnp.clip(n_new - 1, 0, tokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+        logits = self._logits(params, h_last)[:, 0]
+        return logits, self.slot_state().advance(cache, layers, n_new)
+
+    def verify_ragged(self, params, cache, tokens, n_new, aux=None):
+        """Per-POSITION serve step for draft-and-verify speculative
+        decoding: the same ragged contract as :meth:`step_ragged` (slot
+        b consumes ``tokens[b, :n_new[b]]``), but logits come back for
+        EVERY consumed position — ``logits[b, i]`` predicts the token
+        AFTER ``tokens[b, i]`` — together with the post-final-norm
+        hidden states (the MTP drafter's input).  Rows at
+        ``i >= n_new[b]`` are garbage (callers mask).  Returns
+        ``(logits [B, C, V], h [B, C, d], cache)``.  The cache advances
+        by the FULL ``n_new``; a caller rejecting a draft suffix rolls
+        it back by shrinking ``len`` — sound exactly when
+        ``SlotState.supports_rollback()`` (every read mask is bounded by
+        the slot's own length, so the stale tail is never read)."""
+        h, layers, n_new = self._ragged_trunk(params, cache, tokens, n_new,
+                                              aux)
+        logits = self._logits(params, h)
+        return logits, h, self.slot_state().advance(cache, layers, n_new)
+
+    def mtp_draft_logits(self, params, h, next_tokens):
+        """DeepSeek-V3's trained MTP head as a DRAFTER: from
+        :meth:`verify_ragged` hidden states ``h`` [B, C, d] and the
+        accepted next token at each position (the verify argmax),
+        predict one token further out — ``logits[b, i]`` drafts position
+        i+2.  Mirrors :meth:`_mtp_loss` exactly (mtp_ln(h) concatenated
+        with the NEXT token's embedding -> mtp_proj -> one dense MLA
+        block -> shared head), except the next-token embedding comes
+        from the decode-time argmax instead of a rolled teacher-forcing
+        batch.  The MLA block runs positionless self-attention over the
+        C-token window only — a drafter-quality approximation; the
+        verify step guards correctness."""
+        cfg, pol = self.cfg, self.cfg.quant
+        cat = jnp.concatenate([rmsnorm(params["mtp_ln"], h),
+                               self._embed(params, next_tokens)], axis=-1)
+        x = linear_apply(params["mtp_proj"], cat, pol)
+        x, _ = _mla_block(params["mtp_block"], x, cfg, pol, moe=False)
+        return self._logits(params, x)
+
+    def _ragged_trunk(self, params, cache, tokens, n_new, aux=None):
+        """Shared ragged layer stack (contract: :meth:`step_ragged`).
+        Returns (post-final-norm hidden states [B, C, d], updated layer
+        state, int32 ``n_new``)."""
         cfg, pol = self.cfg, self.cfg.quant
         fam = cfg.family
         if not self.supports_ragged():
@@ -785,11 +833,7 @@ class LM:
 
             x, layers = cscan(body, x, (params["blocks"], cache["layers"],
                                         window, theta), name="layers")
-        h = rmsnorm(params["final_ln"], x, cfg.norm_eps)
-        last = jnp.clip(n_new - 1, 0, tokens.shape[1] - 1)
-        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
-        logits = self._logits(params, h_last)[:, 0]
-        return logits, self.slot_state().advance(cache, layers, n_new)
+        return rmsnorm(params["final_ln"], x, cfg.norm_eps), layers, n_new
 
     # ---------------- serving: prefill + scan decode ----------------
 

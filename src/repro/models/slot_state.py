@@ -263,6 +263,30 @@ class SlotState:
                     lay["cross"]["k"].shape[2])
         raise ValueError(fam)
 
+    def supports_rollback(self) -> bool:
+        """True iff a decode step can be partially UNDONE by shrinking
+        ``len`` — the contract speculative decoding's reject-rollback
+        rides on.  Structural, derived from the layout itself (no
+        per-family constant to drift): rollback is sound exactly when a
+        step mutates only length-indexed CACHE rows and LEN counters,
+        because every read mask is bounded by the slot's own ``len`` —
+        after ``len -= rejected`` the stale tail rows are provably never
+        read, for the contiguous AND paged layouts alike.  STATE leaves
+        that are frozen during decode are harmless: the encdec ``cross``
+        cache is written once at admission, and the ``pages`` map only
+        changes at admission/eviction.  Any OTHER state leaf (Mamba2
+        conv/ssm, RWKV6 recurrences) advances irreversibly inside the
+        step, so those families must refuse speculation loudly."""
+        spec = self.layout(1, max(self.page_size, 1), src_cap=1)
+        frozen = {"cross", "pages"}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(spec)[0]:
+            if leaf.kind != STATE:
+                continue
+            keys = {getattr(k, "key", None) for k in path}
+            if not (keys & frozen):
+                return False
+        return True
+
     # ---------------- lifecycle ----------------
 
     def init(self, n_slots: int, max_len: int, dtype=jnp.bfloat16,

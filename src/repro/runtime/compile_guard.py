@@ -60,21 +60,50 @@ class CompileBudgetExceeded(RuntimeError):
 
 
 class _JitDecl:
-    """One watched jitted program: baseline cache size + budget."""
+    """One watched jitted program: baseline cache size + budget, plus a
+    per-owner ledger of budget contributions (``owners`` maps an owner
+    token to ``[contributed_budget, cache_size_at_declaration]``) so a
+    dropped owner's allowance can be reclaimed without disturbing the
+    other declarers' accounting."""
 
-    __slots__ = ("name", "fn", "budget", "base")
+    __slots__ = ("name", "fn", "budget", "base", "owners")
 
-    def __init__(self, name, fn, budget):
+    def __init__(self, name, fn, budget, owner=None):
         self.name, self.fn, self.budget = name, fn, int(budget)
         self.base = fn._cache_size()
+        self.owners = {}
+        if owner is not None:
+            self.owners[owner] = [int(budget), self.base]
 
     def count(self):
         # monotone: jit caches only grow, so the delta is exactly the
         # number of compiles since declaration
         return self.fn._cache_size() - self.base
 
-    def add_budget(self, extra):
+    def add_budget(self, extra, owner=None):
         self.budget += int(extra)
+        if owner is not None:
+            entry = self.owners.get(owner)
+            if entry is None:
+                self.owners[owner] = [int(extra), self.fn._cache_size()]
+            else:
+                entry[0] += int(extra)
+
+    def release_owner(self, owner):
+        """Reclaim ``owner``'s budget contribution.  Compiles are
+        forgiven conservatively: at most the owner's own contribution,
+        at most the compiles that happened SINCE the owner declared
+        (earlier compiles cannot be its), and never below a zero count —
+        so a retrace that overdrew the shared budget stays visible after
+        the churned owner is gone."""
+        entry = self.owners.pop(owner, None)
+        if entry is None:
+            return False
+        contrib, snap = entry
+        self.budget -= contrib
+        since_owner = self.fn._cache_size() - max(snap, self.base)
+        self.base += max(0, min(contrib, since_owner, self.count()))
+        return True
 
 
 class _CounterDecl:
@@ -106,18 +135,40 @@ class CompileGuard:
 
     # ---------------- declaration ----------------
 
-    def declare_jit(self, name: str, jitted, budget: int):
+    def declare_jit(self, name: str, jitted, budget: int, owner=None):
         """Watch ``jitted`` (anything with ``_cache_size()``) under
         ``name``.  Baseline = its current cache size.  Re-declaring the
         same name accumulates budget (shared module-level jits: each
         declarer brings its own allowance); the baseline is NOT moved,
-        so compiles between declarations still count."""
+        so compiles between declarations still count.
+
+        ``owner`` (any hashable token, e.g. one per engine instance)
+        keys the contribution in a per-owner ledger:
+        :meth:`release_owner` later subtracts exactly this owner's
+        allowance again — so a long-lived process that churns engines
+        does not accumulate unbounded allowance on the shared
+        module-level jits.  Ownerless declarations keep the legacy
+        accumulate-forever behavior."""
         d = self._decls.get(name)
         if d is not None:
-            d.add_budget(budget)
+            d.add_budget(budget, owner)
         else:
-            self._decls[name] = _JitDecl(name, jitted, budget)
+            self._decls[name] = _JitDecl(name, jitted, budget, owner)
         return self
+
+    def release_owner(self, owner) -> int:
+        """Reclaim every budget contribution declared under ``owner``
+        (engine drop).  Compiles attributable to the owner are forgiven
+        conservatively — bounded by its contribution AND by the compiles
+        observed since it declared — so reclaiming a churned engine
+        never hides an unrelated retrace overdraft.  Returns the number
+        of declarations adjusted.  Unknown owners are a no-op (safe to
+        call from finalizers)."""
+        n = 0
+        for d in self._decls.values():
+            if isinstance(d, _JitDecl) and d.release_owner(owner):
+                n += 1
+        return n
 
     def wrap_counter(self, module, attr: str, budget: int = 0,
                      name: Optional[str] = None):

@@ -36,17 +36,20 @@ different adapter per slot via the banked gather epilogue:
 """
 
 from .adapters import AdapterStore, extract_pack
-from .engine import ContinuousEngine, EngineCorrupted, EngineStats
+from .engine import (ContinuousEngine, EngineCorrupted, EngineStats,
+                     make_self_drafter)
 from .frontend import (RequestStatus, ServingFrontend, Ticket,
                        TERMINAL_STATUSES, slo_summary)
 from .paging import PageTable, pages_for
 from .scheduler import Request, Scheduler, Slot
+from .speculative import accept_drafts, rollback_counts
 from .trace import (bursty_arrivals, make_trace, poisson_arrivals, replay,
                     static_schedule)
 
 __all__ = ["AdapterStore", "ContinuousEngine", "EngineCorrupted",
            "EngineStats", "PageTable", "Request", "RequestStatus",
            "Scheduler", "ServingFrontend", "Slot", "Ticket",
-           "TERMINAL_STATUSES", "bursty_arrivals", "extract_pack",
-           "make_trace", "pages_for", "poisson_arrivals", "replay",
-           "slo_summary", "static_schedule"]
+           "TERMINAL_STATUSES", "accept_drafts", "bursty_arrivals",
+           "extract_pack", "make_self_drafter", "make_trace", "pages_for",
+           "poisson_arrivals", "replay", "rollback_counts", "slo_summary",
+           "static_schedule"]

@@ -40,15 +40,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import schemes
 from ..runtime import compile_guard
 from .paging import PageTable, pages_for
 from .scheduler import Request, Scheduler
+from .speculative import accept_drafts, rollback_counts
 
 
 def _ragged_step(lm, params, aux, cache, tokens, n_new):
@@ -88,6 +91,63 @@ def _burst_steps(lm, params, aux, cache, tok, remaining, eos, *,
     return cache, tok, remaining, emitted, oks.all()
 
 
+def _draft_steps(lm, params, aux, cache, tok, active, *, k_steps):
+    """Drafter-side lax.scan of ``k_steps`` masked single-token ragged
+    steps (speculative decoding).  Step i inserts its input token and
+    argmaxes the next draft, so the scan proposes d_1..d_{k_steps-1} AND
+    leaves the drafter cache holding exactly the same rows the verify
+    step writes on the target (t0, d_1, ..) — the final step inserts the
+    last draft with its output discarded, which is what makes the
+    post-accept rollback identical for both caches.  No EOS/remaining
+    logic here: drafts are proposals, acceptance handles termination.
+    Drafter health is deliberately unchecked — a NaN-poisoned drafter
+    produces garbage proposals that verification simply rejects."""
+
+    def body(carry, _):
+        cache, tok = carry
+        logits, cache = lm.step_ragged(params, cache, tok[:, None],
+                                       active.astype(jnp.int32), aux=aux)
+        nxt = jnp.where(active, jnp.argmax(logits, -1).astype(jnp.int32),
+                        tok)
+        return (cache, nxt), nxt
+
+    (cache, _), drafts = jax.lax.scan(body, (cache, tok), None,
+                                      length=k_steps)
+    return cache, drafts
+
+
+def _verify_step(lm, params, aux, cache, tokens, n_new):
+    """Verify all k+1 speculative positions in ONE ragged step: returns
+    per-position argmax [B, C] (column i = the target's next token after
+    tokens[:, :i+1]), the health bit over the consumed rows only (rows
+    past n_new are garbage by contract and must not false-trip it), and
+    the cache advanced by the full n_new (the host rolls back the
+    rejected tail by shrinking ``len``)."""
+    logits, _, cache = lm.verify_ragged(params, cache, tokens, n_new,
+                                        aux=aux)
+    valid = jnp.arange(tokens.shape[1])[None, :] < n_new[:, None]
+    ok = jnp.isfinite(jnp.where(valid[..., None], logits, 0.0)).all()
+    return jnp.argmax(logits, -1).astype(jnp.int32), ok, cache
+
+
+def _spec_step_mtp(lm, params, aux, cache, tokens, n_new):
+    """MTP-drafted speculation, fused: one program both VERIFIES this
+    dispatch's draft and DRAFTS the next one from the same hidden
+    states.  ``tokens`` [B, 2] = [last committed token, held MTP draft];
+    ``n_new`` is 2 when the slot holds a draft, 1 on bootstrap (fresh or
+    invalidated slot — same compiled program either way, the ragged
+    contract absorbs it), 0 when idle.  Returns (verify argmax [B, 2],
+    next-draft argmax [B, 2] — the host picks column m-1, the one
+    conditioned on exactly the committed stream —, ok, cache)."""
+    logits, h, cache = lm.verify_ragged(params, cache, tokens, n_new,
+                                        aux=aux)
+    v = jnp.argmax(logits, -1).astype(jnp.int32)
+    draft = jnp.argmax(lm.mtp_draft_logits(params, h, v), -1)
+    valid = jnp.arange(tokens.shape[1])[None, :] < n_new[:, None]
+    ok = jnp.isfinite(jnp.where(valid[..., None], logits, 0.0)).all()
+    return v, draft.astype(jnp.int32), ok, cache
+
+
 def _slot_reset(slot_state, cache, mask):
     # eviction is family-agnostic: SlotState zeroes the evicted slots'
     # lengths AND their snapshot state (recurrences, cross caches);
@@ -108,6 +168,24 @@ _JIT_BURST = jax.jit(_burst_steps, static_argnums=0,
                      static_argnames=("k_steps",))
 _JIT_RESET = jax.jit(_slot_reset, static_argnums=0)
 _JIT_ENCODE = jax.jit(_encode_cross, static_argnums=0)
+_JIT_DRAFT = jax.jit(_draft_steps, static_argnums=0,
+                     static_argnames=("k_steps",))
+_JIT_VERIFY = jax.jit(_verify_step, static_argnums=0)
+_JIT_SPEC_MTP = jax.jit(_spec_step_mtp, static_argnums=0)
+
+
+def make_self_drafter(params, policy: str, base=None, key=None):
+    """Build a reduced-bits SELF-SPECULATION drafter from the same
+    merged weights: re-store every linear of ``params`` under the
+    PolicyTree ``policy`` (e.g. ``"*=intq8"`` — bare re-quantization, no
+    adapters; see ``repro.core.schemes.PolicyTree.parse``).  Zero extra
+    training: the drafter IS the served model at lower precision, so its
+    argmax agrees with the target's wherever quantization noise doesn't
+    flip the top logit.  Returns a params tree for
+    ``ContinuousEngine(..., speculate=k, drafter=<tree>)`` (the engine
+    also accepts the policy string directly and calls this)."""
+    return schemes.convert_tree(params, schemes.PolicyTree.parse(
+        policy, base), key)
 
 
 class EngineCorrupted(RuntimeError):
@@ -131,7 +209,18 @@ class EngineStats:
     (``n_new.sum()``; one per active slot per fused burst step) to
     ``busy_slot_steps`` — so ``occupancy`` is the fraction of computed
     model rows that did useful work, comparable across the ragged and
-    burst paths (and against static batching's padded rows)."""
+    burst paths (and against static batching's padded rows).
+
+    Speculative decoding: ``model_steps``/``slot_steps`` count
+    TARGET-model rows only — the drafter's compute is a throughput bet,
+    not target work, so it is excluded from occupancy accounting (its
+    cost shows up honestly in ``seconds``, i.e. in ``tok_per_s``) while
+    ``dispatches`` counts every program launch including drafter ones.
+    ``proposed_tokens`` / ``accepted_tokens`` track speculation quality:
+    drafts offered to a verify step, and of those the longest-prefix
+    matches that actually committed (the per-dispatch bonus/correction
+    token is a plain greedy token, counted in ``tokens_out`` but never
+    in ``accepted_tokens``)."""
 
     model_steps: int = 0      # model rows computed per slot (C per dispatch)
     dispatches: int = 0       # host->device program launches
@@ -139,6 +228,8 @@ class EngineStats:
     slot_steps: int = 0       # slots x model rows computed
     busy_slot_steps: int = 0  # of those, rows a slot actually consumed
     seconds: float = 0.0
+    proposed_tokens: int = 0  # draft tokens offered to a verify step
+    accepted_tokens: int = 0  # of those, committed (prefix-matched)
 
     @property
     def occupancy(self) -> float:
@@ -147,6 +238,12 @@ class EngineStats:
     @property
     def tok_per_s(self) -> float:
         return self.tokens_out / max(self.seconds, 1e-9)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens that committed (0.0 when
+        nothing was ever proposed — non-speculative engines)."""
+        return self.accepted_tokens / max(self.proposed_tokens, 1)
 
 
 class ContinuousEngine:
@@ -197,7 +294,8 @@ class ContinuousEngine:
                  prefill_chunk: int = 8, decode_burst: int = 8,
                  cache_dtype=jnp.float32, max_src: int = 0,
                  step_hook=None, adapters=None, page_size: int = 0,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, speculate: int = 0,
+                 drafter=None):
         if not lm.supports_ragged():
             raise NotImplementedError(
                 f"continuous engine: family {lm.cfg.family!r} has no "
@@ -228,6 +326,69 @@ class ContinuousEngine:
         db = max(1, decode_burst)
         self.decode_burst = 1 << (db.bit_length() - 1)
         self.cache_dtype = cache_dtype
+        # ---- speculative decoding (draft-and-verify) ----
+        self.speculate = int(speculate)
+        self._mtp_draft = False
+        self.draft_params = self.draft_aux = None
+        if self.speculate < 0:
+            raise ValueError(f"speculate must be >= 0; got {speculate}")
+        if self.speculate > 0:
+            if self.decode_burst > 1:
+                raise ValueError(
+                    f"speculate={self.speculate} and decode_burst="
+                    f"{decode_burst} are both multi-token decode paths "
+                    f"and do not compose: a fused burst commits every "
+                    f"step unconditionally while speculation commits "
+                    f"accepted prefixes with rollback.  Pass "
+                    f"decode_burst=1 when speculating (the verify step "
+                    f"IS the multi-token dispatch).")
+            if not lm.slot_state().supports_rollback():
+                raise NotImplementedError(
+                    f"speculative decoding needs reject-rollback by "
+                    f"length arithmetic, but family {lm.cfg.family!r} "
+                    f"mutates per-slot recurrent STATE inside every "
+                    f"decode step (SlotState.supports_rollback() is "
+                    f"False) — a rejected draft cannot be un-stepped; "
+                    f"serve it with speculate=0")
+            if lm.cfg.family == "encdec":
+                raise NotImplementedError(
+                    "speculative decoding: encdec drafters would need "
+                    "their own per-slot cross caches encoded at "
+                    "admission; serve encdec with speculate=0")
+            if adapters is not None:
+                raise NotImplementedError(
+                    "speculative decoding with an AdapterStore would "
+                    "need the drafter rebuilt per slot->adapter remap; "
+                    "serve adapters with speculate=0")
+            if drafter is None:
+                raise ValueError(
+                    "speculate > 0 needs a drafter: pass drafter='mtp' "
+                    "(mla_moe with a trained MTP head, k=1), a "
+                    "PolicyTree spec string (e.g. '*=intq8' — a "
+                    "reduced-bits self-speculation view of the merged "
+                    "base, built via make_self_drafter), or a prebuilt "
+                    "drafter params tree")
+            if isinstance(drafter, str) and drafter == "mtp":
+                if lm.cfg.family != "mla_moe" or not lm.cfg.mtp \
+                        or "mtp_block" not in params:
+                    raise ValueError(
+                        f"drafter='mtp' needs an mla_moe model trained "
+                        f"with cfg.mtp=True (family {lm.cfg.family!r}, "
+                        f"mtp={lm.cfg.mtp}, mtp_block "
+                        f"{'present' if 'mtp_block' in params else 'absent'})")
+                if self.speculate != 1:
+                    raise ValueError(
+                        f"the MTP head predicts exactly ONE token ahead; "
+                        f"speculate must be 1 with drafter='mtp' (got "
+                        f"{self.speculate})")
+                self._mtp_draft = True
+            elif isinstance(drafter, str):
+                self.draft_params = make_self_drafter(
+                    params, drafter, base=lm.cfg.quant)
+            else:
+                self.draft_params = drafter
+            if self.draft_params is not None:
+                self.draft_aux = lm.absorbed_weights(self.draft_params)
         self.page_size = page_size
         if page_size > 0:
             slot_pages = pages_for(max_len, page_size)
@@ -278,15 +439,43 @@ class ContinuousEngine:
         g = compile_guard.current()
         if g is None:
             return
-        g.declare_jit("engine._JIT_STEP", _JIT_STEP, 4)
-        g.declare_jit("engine._JIT_RESET", _JIT_RESET, 2)
+        # per-engine budget ledger: contributions are keyed by a token
+        # unique to this engine and reclaimed when the engine is
+        # garbage-collected, so a long-lived process churning engines no
+        # longer accumulates unbounded allowance on the shared
+        # module-level jits (PR 9 caveat).  The finalizer holds the
+        # guard and the token, never the engine.
+        owner = f"engine-{id(self)}"
+        weakref.finalize(self, g.release_owner, owner)
+        step_budget = 4
+        if self.draft_params is not None:
+            # the self-spec drafter's params pytree has its own treedef
+            # (reduced-bits storage), so its ride-along/prefill steps key
+            # their own _JIT_STEP programs: same chunk-width x placement
+            # family as the target's -> one extra allowance of 4
+            step_budget += 4
+        g.declare_jit("engine._JIT_STEP", _JIT_STEP, step_budget,
+                      owner=owner)
+        g.declare_jit("engine._JIT_RESET", _JIT_RESET, 2, owner=owner)
         g.declare_jit("engine._JIT_BURST", _JIT_BURST,
-                      self.decode_burst.bit_length())
+                      self.decode_burst.bit_length(), owner=owner)
+        if self.speculate:
+            # one fixed-width program each (C = speculate + 1 / scan
+            # length speculate + 1 / C = 2), x2 cache placements
+            if self._mtp_draft:
+                g.declare_jit("engine._JIT_SPEC_MTP", _JIT_SPEC_MTP, 2,
+                              owner=owner)
+            else:
+                g.declare_jit("engine._JIT_DRAFT", _JIT_DRAFT, 2,
+                              owner=owner)
+                g.declare_jit("engine._JIT_VERIFY", _JIT_VERIFY, 2,
+                              owner=owner)
         if self.max_src:
             budget = self.max_src.bit_length()
             if self.max_src & (self.max_src - 1):
                 budget += 1
-            g.declare_jit("engine._JIT_ENCODE", _JIT_ENCODE, budget)
+            g.declare_jit("engine._JIT_ENCODE", _JIT_ENCODE, budget,
+                          owner=owner)
 
     def reset(self):
         """Drop all queued/in-flight state (compiled steps are shared
@@ -298,10 +487,21 @@ class ContinuousEngine:
             pt = PageTable(self.n_pages, self.page_size,
                            self.slot_state.slot_pages(self.max_len))
         self.sched = Scheduler(self.n_slots, self.max_len,
-                               self.prefill_chunk, page_table=pt)
+                               self.prefill_chunk, page_table=pt,
+                               headroom=self.speculate)
         self.cache = self.slot_state.init(
             self.n_slots, self.max_len, dtype=self.cache_dtype,
             src_cap=self.max_src or None)
+        # self-speculation: the drafter mirrors the target's decode
+        # state shape-for-shape (paged drafters own a SECOND pool
+        # addressed by the same page rows, mirrored in _publish_pages),
+        # so draft rows land at the same positions and the post-accept
+        # rollback is one shared length subtraction
+        self.draft_cache = None
+        if self.draft_params is not None:
+            self.draft_cache = self.slot_state.init(
+                self.n_slots, self.max_len, dtype=self.cache_dtype,
+                src_cap=self.max_src or None)
         self.stats = EngineStats()
         self._adapter_key = None
         self._refresh_adapters()
@@ -432,11 +632,19 @@ class ContinuousEngine:
             mask[filled] = True
             self.cache = _JIT_RESET(self.slot_state, self.cache,
                                     jnp.asarray(mask))
+            if self.draft_cache is not None:
+                # same program, same shapes: a compile-cache hit
+                self.draft_cache = _JIT_RESET(self.slot_state,
+                                              self.draft_cache,
+                                              jnp.asarray(mask))
             self._publish_pages(filled)
             self._pin_cross(filled)
         self._refresh_adapters()
         if self.sched.all_decoding:
-            self._run_burst()
+            if self.speculate:
+                self._run_spec()
+            else:
+                self._run_burst()
         else:
             self._run_ragged()
 
@@ -456,6 +664,15 @@ class ContinuousEngine:
         self.cache["pages"] = self.cache["pages"].at[idx].set(
             jnp.asarray(rows))
         self.cache["len"] = self.cache["len"].at[idx].set(jnp.asarray(lens))
+        if self.draft_cache is not None:
+            # the drafter pool mirrors the page rows 1:1 — a prefix hit
+            # is valid for the drafter too, because the drafter wrote
+            # its own pool at these same page indices when the original
+            # request prefilled (ride-along in _run_ragged)
+            self.draft_cache["pages"] = self.draft_cache["pages"].at[
+                idx].set(jnp.asarray(rows))
+            self.draft_cache["len"] = self.draft_cache["len"].at[idx].set(
+                jnp.asarray(lens))
 
     def _refresh_adapters(self):
         """Rebind ``self.params`` to the store's serving tree for the
@@ -516,6 +733,18 @@ class ContinuousEngine:
         nxt, ok, self.cache = _JIT_STEP(self.lm, self.params, self.aux,
                                         self.cache, jnp.asarray(tokens),
                                         jnp.asarray(n_new))
+        if self.draft_cache is not None:
+            # self-speculation ride-along: the drafter consumes the SAME
+            # plan so its cache rows stay in lockstep with the target's
+            # (prompt chunks and plain decode tokens alike); its output
+            # tokens are discarded, its health deliberately unchecked
+            # (garbage drafts are rejected by verification, never
+            # committed).  Same chunk-width program family as the
+            # target's step, keyed by the drafter's own params treedef.
+            _, _, self.draft_cache = _JIT_STEP(
+                self.lm, self.draft_params, self.draft_aux,
+                self.draft_cache, jnp.asarray(tokens), jnp.asarray(n_new))
+            self.stats.dispatches += 1
         if not bool(ok):
             raise EngineCorrupted(
                 "non-finite logits in ragged step (decode state is "
@@ -561,3 +790,86 @@ class ContinuousEngine:
         st.slot_steps += self.n_slots * k
         st.busy_slot_steps += int((emitted >= 0).sum())
         st.tokens_out += int((emitted >= 0).sum())
+
+    def _run_spec(self):
+        """One draft-and-verify speculative dispatch (all slots
+        decoding).  Draft k candidates per active slot — the reduced-bits
+        self-speculation model, or the in-graph MTP head — then verify
+        all k+1 positions in ONE ragged step and commit each slot's
+        accepted greedy prefix plus its bonus/correction token
+        (:mod:`repro.serving.speculative`: token-identical to plain
+        greedy by construction).  The verify step advanced every active
+        slot by the full k+1 rows; the rejected tail rolls back by a
+        plain per-slot length subtraction — a values-only update, like
+        the page map, so no compiled program ever retraces — on the
+        target AND (self-spec) drafter caches, restoring the invariant
+        that the cache holds the committed stream minus its last token.
+
+        On :class:`EngineCorrupted` the drafter cache may already have
+        advanced for the failed dispatch — irrelevant, because the
+        corruption contract already requires a full ``reset()`` before
+        serving continues (``ServingFrontend`` rebuilds and replays)."""
+        tok, remaining, eos = self.sched.burst_state()
+        active = remaining > 0
+        st = self.stats
+        if self._mtp_draft:
+            held = self.sched.spec_drafts()
+            have = active & (held >= 0)
+            tokens = np.stack([tok, np.maximum(held, 0)], axis=1)
+            n_new = np.where(active, np.where(have, 2, 1), 0)
+            n_new = n_new.astype(np.int32)
+            v, mtp_d, ok, self.cache = _JIT_SPEC_MTP(
+                self.lm, self.params, self.aux, self.cache,
+                jnp.asarray(tokens), jnp.asarray(n_new))
+            st.dispatches += 1
+            if not bool(ok):
+                raise EngineCorrupted(
+                    "non-finite logits in speculative verify (decode "
+                    "state is poisoned); tokens NOT committed")
+            v, mtp_d = np.asarray(v), np.asarray(mtp_d)
+            drafts = np.where(have, held, -1)[:, None]
+            proposed = int(have.sum())
+        else:
+            k = self.speculate
+            self.draft_cache, d = _JIT_DRAFT(
+                self.lm, self.draft_params, self.draft_aux,
+                self.draft_cache, jnp.asarray(tok), jnp.asarray(active),
+                k_steps=k + 1)
+            drafts = np.asarray(d)[:k].T          # [B, k] = d_1..d_k
+            tokens = np.concatenate([tok[:, None], drafts], axis=1)
+            n_new = np.where(active, k + 1, 0).astype(np.int32)
+            v, ok, self.cache = _JIT_VERIFY(
+                self.lm, self.params, self.aux, self.cache,
+                jnp.asarray(tokens), jnp.asarray(n_new))
+            st.dispatches += 2
+            if not bool(ok):
+                raise EngineCorrupted(
+                    "non-finite logits in speculative verify (decode "
+                    "state is poisoned); tokens NOT committed")
+            v = np.asarray(v)
+            proposed = k * int(active.sum())
+        emitted, m = accept_drafts(drafts, v, n_new, remaining, eos)
+        # un-advance the rejected tail on every cache that stepped:
+        # values-only length updates (the compiled programs never see a
+        # new shape), sound because every read mask is bounded by the
+        # slot's own len (SlotState.supports_rollback, checked at
+        # construction) — identical for contiguous and paged layouts
+        rb = rollback_counts(n_new, m)
+        dec = jnp.asarray(rb.astype(np.int32))
+        self.cache["len"] = self.cache["len"] - dec
+        if self.draft_cache is not None:
+            self.draft_cache["len"] = self.draft_cache["len"] - dec
+        if self._mtp_draft:
+            # the next-dispatch draft: column m-1 is the MTP prediction
+            # conditioned on exactly the committed stream (rows 0..m-1
+            # plus the new last token v[m-1])
+            nd = mtp_d[np.arange(self.n_slots), np.maximum(m - 1, 0)]
+            self.sched.set_spec_drafts(np.where(m > 0, nd, -1))
+        self.sched.commit_spec(emitted, m)
+        c = int(tokens.shape[1])
+        st.model_steps += c
+        st.slot_steps += self.n_slots * c
+        st.busy_slot_steps += int(n_new.sum())
+        st.tokens_out += int(m.sum())
+        st.proposed_tokens += proposed
+        st.accepted_tokens += int(np.maximum(m - 1, 0).sum())

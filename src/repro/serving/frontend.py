@@ -145,13 +145,15 @@ class ServingFrontend:
                  injector: Optional[Callable] = None,
                  guard=None, clock: Callable[[], float] = time.monotonic,
                  cache_dtype=None, max_src: int = 0, adapters=None,
-                 page_size: int = 0, n_pages=None):
+                 page_size: int = 0, n_pages=None, speculate: int = 0,
+                 drafter=None):
         kw = {} if cache_dtype is None else {"cache_dtype": cache_dtype}
         self.engine = ContinuousEngine(
             lm, params, n_slots=n_slots, max_len=max_len,
             prefill_chunk=prefill_chunk, decode_burst=decode_burst,
             max_src=max_src, step_hook=injector, adapters=adapters,
-            page_size=page_size, n_pages=n_pages, **kw)
+            page_size=page_size, n_pages=n_pages, speculate=speculate,
+            drafter=drafter, **kw)
         self.queue_cap = queue_cap
         self.max_recoveries = max_recoveries
         self.default_deadline_s = default_deadline_s
@@ -561,7 +563,9 @@ def _sum_stats(a, b):
         tokens_out=a.tokens_out + b.tokens_out,
         slot_steps=a.slot_steps + b.slot_steps,
         busy_slot_steps=a.busy_slot_steps + b.busy_slot_steps,
-        seconds=a.seconds + b.seconds)
+        seconds=a.seconds + b.seconds,
+        proposed_tokens=a.proposed_tokens + b.proposed_tokens,
+        accepted_tokens=a.accepted_tokens + b.accepted_tokens)
 
 
 def slo_summary(frontend: ServingFrontend) -> Dict[str, float]:

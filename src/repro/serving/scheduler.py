@@ -57,6 +57,11 @@ class Slot:
     pp: int = 0                   # prompt tokens already fed to the model
     emitted: Optional[List[int]] = None
     last_tok: int = 0             # last generated token (decode input)
+    # MTP-drafted speculation: the drafter's guess for the token AFTER
+    # last_tok, produced by the previous speculative dispatch.  -1 = no
+    # valid draft (fresh slot, or invalidated because a non-speculative
+    # commit advanced the stream the draft was conditioned on).
+    spec_draft: int = -1
 
     def __post_init__(self):
         if self.emitted is None:
@@ -86,12 +91,19 @@ class Scheduler:
     eviction) returns the slot's pages in the same call."""
 
     def __init__(self, n_slots: int, max_len: int, prefill_chunk: int = 8,
-                 page_table: Optional[PageTable] = None):
-        assert n_slots >= 1 and prefill_chunk >= 1
+                 page_table: Optional[PageTable] = None,
+                 headroom: int = 0):
+        assert n_slots >= 1 and prefill_chunk >= 1 and headroom >= 0
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.page_table = page_table
+        # speculative decoding: a verify dispatch transiently writes up
+        # to `headroom` cache rows past the committed stream before the
+        # rejected tail rolls back, so admission must reserve that many
+        # extra positions (contiguous: within max_len; paged: within the
+        # slot's allocated pages — never the null page)
+        self.headroom = headroom
         self.queue: deque = deque()
         self.slots: List[Optional[Slot]] = [None] * n_slots
         self.outputs: Dict[int, List[int]] = {}
@@ -108,17 +120,18 @@ class Scheduler:
             raise ValueError("empty prompt: feed BOS explicitly")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
+        need = len(req.prompt) + req.max_new_tokens + self.headroom
+        extra = (f" (+{self.headroom} speculative headroom)"
+                 if self.headroom else "")
+        if need > self.max_len:
             raise ValueError(
-                f"request needs {len(req.prompt)} + {req.max_new_tokens} "
-                f"cache positions but slots hold {self.max_len}")
-        if (self.page_table is not None
-                and not self.page_table.fits(len(req.prompt)
-                                             + req.max_new_tokens)):
+                f"request needs {len(req.prompt)} + {req.max_new_tokens}"
+                f"{extra} cache positions but slots hold {self.max_len}")
+        if self.page_table is not None and not self.page_table.fits(need):
             raise ValueError(
-                f"request needs {len(req.prompt)} + {req.max_new_tokens} "
-                f"cache positions but the page pool can never cover it "
-                f"(capacity {self.page_table.capacity} pages of "
+                f"request needs {len(req.prompt)} + {req.max_new_tokens}"
+                f"{extra} cache positions but the page pool can never "
+                f"cover it (capacity {self.page_table.capacity} pages of "
                 f"{self.page_table.page_size})")
         if req.rid < 0:
             req.rid = self._next_rid
@@ -157,7 +170,8 @@ class Scheduler:
                     # KV depends on which adapter computed it, so pages
                     # are only ever shared within one tenant
                     got = self.page_table.admit(
-                        i, req.prompt, len(req.prompt) + req.max_new_tokens,
+                        i, req.prompt,
+                        len(req.prompt) + req.max_new_tokens + self.headroom,
                         salt=req.adapter_id)
                     if got is None:
                         break          # loud backoff: head stays queued
@@ -278,6 +292,10 @@ class Scheduler:
             tok = int(next_tokens[i])
             s.emitted.append(tok)
             s.last_tok = tok
+            # a plain commit advances the stream past whatever context a
+            # held MTP draft was conditioned on — drop it (the next
+            # speculative dispatch bootstraps draft-less, n_new=1)
+            s.spec_draft = -1
             if s.remaining <= 0 or (s.req.eos_id is not None
                                     and tok == s.req.eos_id):
                 self.outputs[s.req.rid] = s.emitted
@@ -303,6 +321,50 @@ class Scheduler:
             if s.req.eos_id is not None:
                 eos[i] = s.req.eos_id
         return tok, remaining, eos
+
+    # ---------------- speculative-decode interface ----------------
+
+    def spec_drafts(self) -> np.ndarray:
+        """Per-slot held MTP draft tokens ``[n_slots] int32`` (-1 = no
+        draft: free slot, fresh slot, or a draft invalidated by a plain
+        :meth:`commit`)."""
+        d = np.full((self.n_slots,), -1, np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                d[i] = s.spec_draft
+        return d
+
+    def set_spec_drafts(self, drafts: np.ndarray):
+        """Store each live slot's next-dispatch MTP draft (ignored for
+        free slots; pass -1 to clear)."""
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                s.spec_draft = int(drafts[i])
+
+    def commit_spec(self, emitted: np.ndarray, m: np.ndarray) -> List[int]:
+        """Fold one draft-and-verify dispatch back in.  ``emitted``
+        [B, C] holds each slot's accepted greedy run left-aligned
+        (-1-padded past ``m[b]``; see
+        :func:`repro.serving.speculative.accept_drafts` — remaining/EOS
+        truncation already applied, so every row here commits).  Same
+        termination rule as :meth:`commit`: a slot finishes when its
+        allowance is exhausted or its run contains EOS (the stream keeps
+        the EOS).  Only valid once every slot is past its prompt."""
+        done = []
+        for i, s in enumerate(self.slots):
+            if s is None or int(m[i]) <= 0:
+                continue
+            toks = [int(t) for t in emitted[i, :int(m[i])]]
+            s.emitted.extend(toks)
+            s.last_tok = toks[-1]
+            if s.remaining <= 0 or (s.req.eos_id is not None
+                                    and s.req.eos_id in toks):
+                self.outputs[s.req.rid] = s.emitted
+                self.slots[i] = None
+                if self.page_table is not None:
+                    self.page_table.release(i)
+                done.append(s.req.rid)
+        return done
 
     def commit_burst(self, emitted: np.ndarray, tok: np.ndarray,
                      remaining: np.ndarray) -> List[int]:

@@ -205,12 +205,80 @@ def test_engine_smoke_under_env_guard(served, monkeypatch):
 
 
 def test_second_engine_accumulates_budget_on_shared_jits(served):
+    """Two LIVE engines sharing one module-level jit each keep their own
+    allowance; the variables matter — budgets are owner-keyed and a
+    dropped engine's contribution is reclaimed at garbage collection."""
     cfg, lm, merged = served
     with CompileGuard("two-engines") as g:
-        ContinuousEngine(lm, merged, n_slots=2, max_len=16, decode_burst=4)
-        ContinuousEngine(lm, merged, n_slots=2, max_len=16, decode_burst=4)
+        e1 = ContinuousEngine(lm, merged, n_slots=2, max_len=16,
+                              decode_burst=4)
+        e2 = ContinuousEngine(lm, merged, n_slots=2, max_len=16,
+                              decode_burst=4)
         assert g.counts()["engine._JIT_BURST"][1] == 6  # 3 + 3
         assert g.counts()["engine._JIT_RESET"][1] == 4  # 2 + 2
+        del e1
+        assert g.counts()["engine._JIT_BURST"][1] == 3  # reclaimed
+        del e2
+        assert g.counts()["engine._JIT_BURST"][1] == 0
+
+
+def test_engine_churn_does_not_accumulate_allowance(served):
+    """The PR 9 caveat, closed: a long-lived process that churns engines
+    used to inflate the shared jits' allowance without bound; with the
+    per-owner ledger, N constructions of dropped engines leave the same
+    budget as one live engine."""
+    cfg, lm, merged = served
+    with CompileGuard("churn") as g:
+        for _ in range(5):
+            ContinuousEngine(lm, merged, n_slots=2, max_len=16,
+                             decode_burst=4)  # dropped immediately
+        eng = ContinuousEngine(lm, merged, n_slots=2, max_len=16,
+                               decode_burst=4)
+        assert g.counts()["engine._JIT_BURST"][1] == 3   # not 18
+        assert g.counts()["engine._JIT_RESET"][1] == 2   # not 12
+        del eng
+
+
+def test_release_owner_forgiveness_is_bounded():
+    """Reclaiming an owner forgives at most ITS contribution, and only
+    compiles observed since it declared — an unrelated overdraft stays
+    visible after the churned owner is gone."""
+    f = FakeJit()
+    g = CompileGuard("t")
+    g.declare_jit("prog", f, budget=2, owner="a")
+    f.compile(4)                      # overdraft: 4 compiles vs budget 2
+    g.declare_jit("prog", f, budget=2, owner="b")  # b: snap at 4
+    assert g.release_owner("b") == 1  # b compiled nothing: forgive 0
+    assert g.counts()["prog"] == (4, 2)
+    with pytest.raises(CompileBudgetExceeded):
+        g.check()
+    # releasing the owner that DID compile forgives at most its budget
+    assert g.release_owner("a") == 1
+    assert g.counts()["prog"] == (2, 0)
+    assert g.release_owner("ghost") == 0  # unknown owner: no-op
+
+
+def test_release_owner_forgives_churned_compiles():
+    """The intended churn pattern: each owner declares, compiles its own
+    programs, and is released — count and budget both return to zero, so
+    fresh owners start clean instead of inheriting stale compiles."""
+    f = FakeJit()
+    g = CompileGuard("t")
+    for owner in ("e1", "e2"):
+        g.declare_jit("prog", f, budget=3, owner=owner)
+        f.compile(3)
+        g.check()
+        g.release_owner(owner)
+        assert g.counts()["prog"] == (0, 0)
+
+
+def test_ownerless_declarations_keep_legacy_accumulation():
+    f = FakeJit()
+    g = CompileGuard("t")
+    g.declare_jit("prog", f, budget=1)
+    g.declare_jit("prog", f, budget=1)
+    assert g.release_owner("anything") == 0
+    assert g.counts()["prog"] == (0, 2)  # nothing reclaimable
 
 
 def test_encdec_encoder_bucket_budget_formula():
@@ -220,9 +288,11 @@ def test_encdec_encoder_bucket_budget_formula():
     lm = LM(cfg)
     merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
     with CompileGuard("enc-pow2") as g:
-        ContinuousEngine(lm, merged, n_slots=1, max_len=8, max_src=8)
+        eng = ContinuousEngine(lm, merged, n_slots=1, max_len=8, max_src=8)
         assert g.counts()["engine._JIT_ENCODE"][1] == 4  # {1, 2, 4, 8}
+        del eng
     with CompileGuard("enc-capped") as g:
-        ContinuousEngine(lm, merged, n_slots=1, max_len=8, max_src=12)
+        eng = ContinuousEngine(lm, merged, n_slots=1, max_len=8, max_src=12)
         # {1, 2, 4, 8} + the capped 12 bucket
         assert g.counts()["engine._JIT_ENCODE"][1] == 5
+        del eng

@@ -1,0 +1,243 @@
+"""Speculative decoding, host-side semantics: hypothesis property suite
+for the accept-prefix rule (``repro.serving.speculative``), the
+structural rollback predicate, hand-computed EngineStats speculation
+counters, and the loud speculate/decode_burst knob conflict.
+
+The acceptance oracle trick: a deterministic function ``f(prefix) ->
+token`` stands in for the target model's argmax.  Building the verify
+row as ``v_i = f([t0, d_1..d_i])`` makes the pure-greedy stream
+``g_1 = f([t0]), g_2 = f([t0, g_1]), ...`` computable directly, so the
+property "whatever accept_drafts commits IS the greedy stream prefix"
+— the whole correctness claim of greedy speculative decoding — is
+checkable without tracing a model.
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback sweep (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
+
+import repro.configs as C
+from repro.launch.serve import merge_model
+from repro.models.lm import LM
+from repro.serving import (ContinuousEngine, accept_drafts, make_trace,
+                           rollback_counts)
+
+VOCAB = 8  # tiny: draft matches and EOS hits must both be likely
+
+
+def _oracle(seed):
+    """Deterministic target-argmax stand-in: token = hash(prefix)."""
+    def f(prefix):
+        h = seed
+        for i, t in enumerate(prefix):
+            h = (h * 1000003 + (i + 1) * (int(t) + 7)) % (2 ** 31)
+        return h % VOCAB
+    return f
+
+
+def _greedy_stream(f, t0, n, remaining, eos):
+    """Reference: per-step greedy decode under the same oracle, with
+    Scheduler.commit's termination rule (remaining cap, inclusive EOS)."""
+    out, prefix = [], [t0]
+    for _ in range(n):
+        if len(out) >= remaining:
+            break
+        t = f(tuple(prefix))
+        out.append(t)
+        prefix.append(t)
+        if eos >= 0 and t == eos:
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# accept-prefix property suite
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=60)
+@given(seed=st.integers(0, 10 ** 6), B=st.integers(1, 4),
+       K=st.integers(1, 4))
+def test_accepted_run_is_exactly_the_greedy_stream(seed, B, K):
+    """The correctness core: for EVERY draft sequence (biased toward the
+    oracle's own continuation so long matches occur, but arbitrary),
+    ``accept_drafts`` commits exactly the tokens per-step greedy decode
+    would have emitted — speculation changes throughput, never content.
+    Also pins maximality (m = min(a+1, remaining, first-EOS cut)), the
+    >= 1 progress guarantee for active slots, the idle-slot no-op, and
+    the rollback identity m + rollback == n_new."""
+    rng = np.random.default_rng(seed)
+    f = _oracle(seed)
+    t0 = rng.integers(0, VOCAB, size=B)
+    n_new = np.where(rng.random(B) < 0.2, 0,
+                     rng.integers(1, K + 2, size=B))
+    remaining = rng.integers(1, 7, size=B)
+    eos = np.where(rng.random(B) < 0.5, -1, rng.integers(0, VOCAB, size=B))
+
+    drafts = np.full((B, K), -1, np.int64)
+    verify = np.full((B, K + 1), 777_777, np.int64)  # garbage: must mask
+    for b in range(B):
+        prefix = [int(t0[b])]
+        for i in range(max(int(n_new[b]) - 1, 0)):
+            g = f(tuple(prefix))
+            d = g if rng.random() < 0.6 else int(rng.integers(0, VOCAB))
+            drafts[b, i] = d
+            prefix.append(d)
+        for i in range(int(n_new[b])):
+            verify[b, i] = f((int(t0[b]), *map(int, drafts[b, :i])))
+
+    emitted, m = accept_drafts(drafts, verify, n_new, remaining, eos)
+    rb = rollback_counts(n_new, m)
+    for b in range(B):
+        if n_new[b] == 0:
+            assert m[b] == 0 and (emitted[b] == -1).all()
+            continue
+        k = int(n_new[b]) - 1
+        a = 0
+        while a < k and drafts[b, a] == verify[b, a]:
+            a += 1
+        ref = _greedy_stream(f, int(t0[b]), a + 1, int(remaining[b]),
+                             int(eos[b]))
+        assert m[b] >= 1                      # progress: bonus/correction
+        assert list(emitted[b, :m[b]]) == ref  # greedy-prefix identity
+        assert (emitted[b, m[b]:] == -1).all()
+        cut = len(ref) < a + 1                # truncated by remaining/EOS?
+        assert cut or m[b] == a + 1           # else maximal
+        assert m[b] + rb[b] == n_new[b]
+    assert (rb >= 0).all()
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 10 ** 6), K=st.integers(1, 4))
+def test_all_drafts_from_the_oracle_accept_everything(seed, K):
+    """A drafter that IS the target (self-speculation with a lossless
+    policy) gets every draft accepted: m = k + 1 everywhere that
+    termination doesn't cut the run."""
+    f = _oracle(seed)
+    t0, prefix, drafts = 3, [3], []
+    for _ in range(K):
+        d = f(tuple(prefix))
+        drafts.append(d)
+        prefix.append(d)
+    verify = [f((t0, *drafts[:i])) for i in range(K + 1)]
+    emitted, m = accept_drafts(np.asarray([drafts]), np.asarray([verify]),
+                               np.asarray([K + 1]), np.asarray([K + 9]),
+                               np.asarray([-1]))
+    assert m[0] == K + 1
+    assert list(emitted[0]) == verify
+
+
+def test_rollback_counts_rejects_overcommit():
+    with pytest.raises(ValueError, match="more rows than verified"):
+        rollback_counts(np.asarray([2]), np.asarray([3]))
+
+
+def test_accept_drafts_shape_mismatch_is_loud():
+    with pytest.raises(ValueError, match=r"drafts must be \[B, K\]"):
+        accept_drafts(np.zeros((2, 3)), np.zeros((2, 3)),
+                      np.asarray([1, 1]), np.asarray([4, 4]),
+                      np.asarray([-1, -1]))
+
+
+# ---------------------------------------------------------------------------
+# structural rollback predicate
+# ---------------------------------------------------------------------------
+
+
+def test_supports_rollback_matches_family_semantics():
+    """Length-addressed rollback is sound exactly when every mutable
+    slot-state leaf is addressed by the per-slot length (KV rows) —
+    true for the slotted-KV families, false for running recurrences
+    (mamba_hybrid / rwkv fold history into a state that has no length
+    axis to shrink)."""
+    assert LM(C.reduced("gemma3-1b")).slot_state().supports_rollback()
+    assert LM(C.reduced("deepseek-v3-671b",
+                        n_layers=2, n_dense_layers=2,
+                        mtp=True)).slot_state().supports_rollback()
+    assert not LM(C.reduced("rwkv6-7b")).slot_state().supports_rollback()
+    assert not LM(C.reduced("zamba2-7b")).slot_state().supports_rollback()
+
+
+# ---------------------------------------------------------------------------
+# engine: knob conflict + hand-computed stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = C.reduced("gemma3-1b")
+    lm = LM(cfg)
+    merged = merge_model(lm.init(jax.random.PRNGKey(0)), cfg.quant)
+    return cfg, lm, merged
+
+
+def test_speculate_with_burst_raises_naming_both_knobs(served):
+    cfg, lm, merged = served
+    with pytest.raises(ValueError,
+                       match=r"speculate=2 and decode_burst=8.*"
+                             r"decode_burst=1 when speculating"):
+        ContinuousEngine(lm, merged, n_slots=1, max_len=16,
+                         decode_burst=8, speculate=2, drafter="*=intq8")
+
+
+def test_speculate_without_drafter_raises(served):
+    cfg, lm, merged = served
+    with pytest.raises(ValueError, match="needs a drafter"):
+        ContinuousEngine(lm, merged, n_slots=1, max_len=16,
+                         decode_burst=1, speculate=2)
+
+
+def test_stats_counters_on_a_hand_computed_perfect_trace(served):
+    """Drafter = the merged target itself -> every draft accepted; the
+    whole speculation ledger is computable by hand.  One slot, prompt 2,
+    gen 5, k=2: prefill emits token 1; spec dispatch 1 (remaining 4)
+    commits 3 (2 accepted drafts + bonus); spec dispatch 2 (remaining 1)
+    proposes 2 but remaining caps m at 1, accepting 0.  So
+    proposed = 2 + 2 = 4, accepted = 2 + 0 = 2, tokens_out = 5,
+    acceptance_rate = 0.5."""
+    cfg, lm, merged = served
+    eng = ContinuousEngine(lm, merged, n_slots=1, max_len=9,
+                           prefill_chunk=2, decode_burst=1,
+                           speculate=2, drafter=merged)
+    prompt = np.asarray([5, 11], np.int32)
+    rid = eng.submit(prompt, 5, eos_id=None)
+    out = eng.run()
+    st = eng.stats
+    assert len(out[rid]) == 5
+    assert st.proposed_tokens == 4
+    assert st.accepted_tokens == 2
+    assert st.tokens_out == 5
+    assert st.acceptance_rate == pytest.approx(0.5)
+
+    plain = ContinuousEngine(lm, merged, n_slots=1, max_len=9,
+                             prefill_chunk=2, decode_burst=1)
+    rid_p = plain.submit(prompt, 5, eos_id=None)
+    assert plain.run()[rid_p] == out[rid]
+    assert plain.stats.proposed_tokens == 0
+    assert plain.stats.accepted_tokens == 0
+    assert plain.stats.acceptance_rate == 0.0
+
+
+def test_spec_smoke_matches_plain_engine(served):
+    """Fast engine-vs-engine equivalence on a small mixed trace with an
+    imperfect (intq8 self-draft) drafter and EOS termination live."""
+    cfg, lm, merged = served
+    trace = make_trace(3, cfg.vocab, seed=11, prompt_lens=(2, 4),
+                       gen_lens=(3, 6))
+    run = lambda eng: [eng.submit(r.prompt, r.max_new_tokens, r.eos_id,
+                                  rid=r.rid) for r in trace] and eng.run()
+    spec = run(ContinuousEngine(lm, merged, n_slots=2, max_len=14,
+                                prefill_chunk=2, decode_burst=1,
+                                speculate=2, drafter="*=intq8"))
+    plain = run(ContinuousEngine(lm, merged, n_slots=2, max_len=14,
+                                 prefill_chunk=2, decode_burst=1))
+    assert spec == plain

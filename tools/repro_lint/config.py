@@ -16,6 +16,7 @@ CONFIG = {
             "src/repro/serving/scheduler.py",
             "src/repro/serving/paging.py",
             "src/repro/serving/trace.py",
+            "src/repro/serving/speculative.py",
         ),
         "forbidden_roots": ("jax", "jaxlib"),
     },
@@ -92,6 +93,7 @@ CONFIG = {
             "src/repro/serving/scheduler.py",
             "src/repro/serving/paging.py",
             "src/repro/serving/trace.py",
+            "src/repro/serving/speculative.py",
             "src/repro/serving/frontend.py",
             "src/repro/serving/engine.py",
         ),
